@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Module map:
+  comm_time            Figures 2/3/4 (LeNet D-SGD, comm time vs r)
+  staleness            §3.2 / Theorem 4 (tau sweep)
+  byzantine            §4 / Theorems 5-6 (attack x rule grid)
+  redundancy_tradeoff  Definition 1 (overlap -> eps -> error)
+  roofline             §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: comm_time,staleness,byzantine,"
+                         "redundancy,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced iteration counts")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def go(name, fn):
+        if want and name not in want:
+            return
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            traceback.print_exc()
+            print(f"{name},nan,ERROR:{type(e).__name__}", flush=True)
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import roofline
+    go("roofline", roofline.main)
+
+    from benchmarks import staleness
+    go("staleness", (lambda: staleness.run(500)) if args.fast
+       else staleness.main)
+
+    from benchmarks import byzantine
+    go("byzantine", (lambda: byzantine.run(400)) if args.fast
+       else byzantine.main)
+
+    from benchmarks import redundancy_tradeoff
+    go("redundancy", redundancy_tradeoff.main)
+
+    from benchmarks import comm_time
+    go("comm_time", (lambda: comm_time.run(iters=30)) if args.fast
+       else comm_time.main)
+
+
+if __name__ == "__main__":
+    main()

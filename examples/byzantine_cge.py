@@ -1,0 +1,45 @@
+"""Byzantine + straggler tolerance (§4): CGE gradient filter with f faulty
+agents sending adversarial vectors AND r stragglers dropped per round.
+
+    PYTHONPATH=src python examples/byzantine_cge.py
+"""
+import numpy as np
+
+from repro.core.async_engine import AsyncEngine, EngineConfig, default_latency
+from repro.core.redundancy import (certify_f_r_eps,
+                                   make_redundant_quadratics)
+
+N, D, R, F = 12, 6, 2, 2
+
+
+def run(rule, attack):
+    costs = make_redundant_quadratics(N, D, spread=0.02, cond=1.5, seed=3)
+    mu = costs.mu()
+    eng = AsyncEngine(
+        lambda j, x, rng: costs.grad(j, x), np.zeros(D),
+        EngineConfig(n_agents=N, r=R, f=F, rule=rule, byz_ids=(0, 5),
+                     attack=attack,
+                     step_size=lambda t: 0.3 / (mu * N) / (1 + 3e-3 * t),
+                     proj_gamma=50.0),
+        latency=default_latency(N, 2, 8.0),
+        x_star=costs.global_min())
+    return eng.run(2000).dist[-1]
+
+
+def main():
+    costs = make_redundant_quadratics(N, D, spread=0.02, cond=1.5, seed=3)
+    eps = certify_f_r_eps(costs, F, R, samples=600)
+    print(f"certified (f={F}, r={R}; eps={eps:.4f})-redundancy "
+          f"(Definition 3)\n")
+    print(f"{'attack':<18} {'no filter':>10} {'CGE':>8} {'trimmed':>8}")
+    for attack in ("large_norm", "sign_flip", "random_gaussian"):
+        d_sum = run("sum", attack)
+        d_cge = run("cge", attack)
+        d_tm = run("trimmed_mean", attack)
+        print(f"{attack:<18} {d_sum:>10.4f} {d_cge:>8.4f} {d_tm:>8.4f}")
+    print("\nCGE/trimmed-mean stay near x*; the unfiltered sum is driven "
+          "to the boundary of W (Theorem 6 vs no-filter).")
+
+
+if __name__ == "__main__":
+    main()

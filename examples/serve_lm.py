@@ -1,0 +1,65 @@
+"""Batched serving example: prefill a prompt batch, then decode tokens
+step-by-step through the KV/SSM cache (works for every registry arch,
+including the attention-free and hybrid ones).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.launch.serve import make_decode_step
+from repro.models.model import apply_model, init_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_model(rng, cfg, max_pos=256)
+    prompt = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    max_len = args.prompt_len + args.tokens
+
+    # prefill, then pad the cache's seq axis out to max_len
+    _, _, cache = apply_model(params, prompt, cfg, mode="prefill")
+    s0 = args.prompt_len
+
+    def pad(c):
+        if c.ndim >= 3 and c.shape[2] == s0:
+            pw = [(0, 0)] * c.ndim
+            pw[2] = (0, max_len - s0)
+            return jnp.pad(c, pw)
+        return c
+
+    cache = jax.tree.map(pad, cache)
+    decode = jax.jit(make_decode_step(cfg))
+
+    logits, _, _ = apply_model(params, prompt, cfg, mode="train")
+    cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [prompt, cur]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        nxt, cache = decode(params, {"tokens": cur, "cache": cache,
+                                     "pos": jnp.int32(s0 + i)})
+        cur = nxt[:, None]
+        out.append(cur)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"arch={args.arch} generated {args.tokens} tokens x "
+          f"{args.batch} seqs in {dt:.2f}s "
+          f"({args.batch * (args.tokens - 1) / max(dt, 1e-9):.1f} tok/s)")
+    print("first sequence:", seqs[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

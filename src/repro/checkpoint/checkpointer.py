@@ -1,0 +1,123 @@
+"""Atomic, async checkpointing (fault tolerance for the training job).
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json``, written to a
+``.tmp`` directory and atomically renamed — a crash mid-save can never
+corrupt the latest checkpoint (the restore path only reads directories with
+a manifest). Saves run on a background thread (training continues; the
+checkpointer joins before starting the next save). Keeps ``keep`` newest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(state: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        leaves.append(np.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
+                      if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, state: PyTree, step: int, blocking: bool = False,
+             meta: Optional[Dict] = None) -> None:
+        self.wait()
+        # materialize on the caller's thread (device -> host)
+        flat = _flatten(jax.device_get(state))
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            manifest = {"step": step, "time": time.time(),
+                        "keys": sorted(flat), "meta": meta or {}}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)           # atomic publish
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def _steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def _gc(self):
+        steps = self._steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def restore(self, template: PyTree, step: Optional[int] = None
+                ) -> Tuple[PyTree, int]:
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_into(template, flat), step
+
+    def restore_flat(self, step: Optional[int] = None
+                     ) -> Tuple[Dict[str, np.ndarray], int]:
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        path = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            return {k: z[k] for k in z.files}, step

@@ -1,0 +1,22 @@
+"""Yi-6B — llama-architecture dense GQA. [arXiv:2403.04652; hf]"""
+from repro.configs.base import ArchConfig
+from repro.configs.registry import register
+
+CONFIG = register(ArchConfig(
+    name="yi-6b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    head_dim=128,
+    attention="gqa",
+    layer_pattern=("attn",),
+    rope="rope",
+    rope_theta=5_000_000.0,
+    norm="rmsnorm",
+    act="swiglu",
+    source="arXiv:2403.04652",
+))

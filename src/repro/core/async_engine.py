@@ -1,0 +1,233 @@
+"""Event-driven asynchronous server/agent engine (paper Fig. 1 system).
+
+Reproduces the paper's experimental semantics exactly:
+
+- **fresh** mode = Algorithm 1: every iteration the server broadcasts x^t,
+  agents compute gradients at x^t, the server uses the first n-r arrivals
+  (S^t) and drops the rest.
+- **stale** mode = §3.2 rule (15): agents run free; the server keeps a
+  per-agent ledger of the latest delivered (timestamp, gradient) and
+  proceeds once >= n-r ledger entries have timestamp >= t - tau. The
+  T^{t;t-i} sets of the paper are exactly the ledger partitioned by
+  timestamp (disjoint by construction — one entry per agent).
+- **byzantine**: faulty agents send attacked vectors (arbitrarily fast —
+  worst case); the server pipes the first n-r arrivals through a gradient
+  filter (eq. 18), e.g. CGE.
+
+Latency is a heavy-tail model matching §5's observation that "a small
+number of stragglers work very slow". Crash/recovery windows exercise the
+fault-tolerance path. The engine is the reference implementation whose
+semantics the SPMD integration (repro.launch.train) mirrors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import gradagg
+from repro.core.byzantine import ATTACKS
+
+
+@dataclass
+class LatencyModel:
+    """Per-iteration agent latency = base[j] * lognormal(sigma) * slow[j]."""
+    n_agents: int
+    mean: float = 1.0
+    sigma: float = 0.25
+    straggler_ids: Tuple[int, ...] = ()
+    straggler_factor: float = 10.0
+    comm: float = 0.05                # one-way message time
+
+    def sample(self, rng: np.random.Generator) -> np.ndarray:
+        lat = self.mean * rng.lognormal(0.0, self.sigma, size=self.n_agents)
+        lat = np.asarray(lat)
+        for j in self.straggler_ids:
+            lat[j] *= self.straggler_factor
+        return lat + 2 * self.comm    # broadcast + return
+
+
+def default_latency(n_agents: int, n_stragglers: int = 3,
+                    factor: float = 10.0, seed: int = 0) -> LatencyModel:
+    rng = np.random.default_rng(seed)
+    ids = tuple(rng.choice(n_agents, size=n_stragglers, replace=False))
+    return LatencyModel(n_agents=n_agents, straggler_ids=ids,
+                        straggler_factor=factor)
+
+
+@dataclass
+class EngineConfig:
+    n_agents: int
+    r: int = 0
+    mode: str = "fresh"               # fresh | stale
+    tau: int = 0                      # staleness bound (stale mode)
+    f: int = 0                        # Byzantine tolerance of the filter
+    byz_ids: Tuple[int, ...] = ()
+    attack: Optional[str] = None
+    rule: str = "sum"                 # sum | mean | cge | trimmed_mean
+    step_size: Callable[[int], float] = lambda t: 0.01
+    proj_gamma: float = 1e6           # radius of W (L2 ball)
+    seed: int = 0
+    # crash windows: (agent, t_start, t_end) in wall-clock time
+    crashes: Tuple[Tuple[int, float, float], ...] = ()
+
+
+@dataclass
+class History:
+    loss: List[float] = field(default_factory=list)
+    dist: List[float] = field(default_factory=list)
+    comm_time: List[float] = field(default_factory=list)   # per-iteration
+    wall: List[float] = field(default_factory=list)
+    bytes_tx: int = 0
+    staleness: List[float] = field(default_factory=list)   # mean age used
+
+    @property
+    def cum_comm(self) -> np.ndarray:
+        return np.cumsum(self.comm_time)
+
+
+class AsyncEngine:
+    """grad_fn(agent_id, x, rng) -> flat gradient; loss_fn(x) -> float."""
+
+    def __init__(self, grad_fn, x0: np.ndarray, cfg: EngineConfig,
+                 latency: Optional[LatencyModel] = None,
+                 loss_fn=None, x_star: Optional[np.ndarray] = None):
+        self.grad_fn = grad_fn
+        self.x = np.asarray(x0, np.float64).copy()
+        self.cfg = cfg
+        self.lat = latency or default_latency(cfg.n_agents)
+        self.loss_fn = loss_fn
+        self.x_star = x_star
+        self.rng = np.random.default_rng(cfg.seed)
+        self.t = 0
+        self.clock = 0.0
+        self.hist = History()
+        self.rule = gradagg.make_gradagg(cfg.rule, f=cfg.f)
+        # stale-mode state
+        self._x_hist: Dict[int, np.ndarray] = {}
+        self._ledger_ts = np.full(cfg.n_agents, -1, np.int64)
+        self._ledger_g = np.zeros((cfg.n_agents, x0.size))
+        self._busy_until = np.zeros(cfg.n_agents)
+        self._working_on = np.full(cfg.n_agents, -1, np.int64)
+
+    # ------------------------------------------------------------------
+    def _alive(self, j: int, now: float) -> bool:
+        for (a, t0, t1) in self.cfg.crashes:
+            if a == j and t0 <= now < t1:
+                return False
+        return True
+
+    def _send(self, j: int, x: np.ndarray) -> np.ndarray:
+        g = self.grad_fn(j, x, self.rng)
+        if j in self.cfg.byz_ids and self.cfg.attack:
+            g = ATTACKS[self.cfg.attack](g, self.rng)
+        return np.asarray(g, np.float64)
+
+    def _apply(self, agg: np.ndarray, eta: float) -> None:
+        self.x = gradagg.project_ball(
+            np.asarray(self.x - eta * agg), self.cfg.proj_gamma)
+
+    def _record(self, round_time: float, mean_age: float = 0.0,
+                n_rx: int = 0) -> None:
+        c = self.cfg
+        self.hist.comm_time.append(round_time)
+        self.clock += round_time
+        self.hist.wall.append(self.clock)
+        self.hist.staleness.append(mean_age)
+        self.hist.bytes_tx += (c.n_agents + n_rx) * self.x.size * 4
+        if self.loss_fn is not None:
+            self.hist.loss.append(float(self.loss_fn(self.x)))
+        if self.x_star is not None:
+            self.hist.dist.append(float(np.linalg.norm(self.x - self.x_star)))
+
+    # ------------------------------------------------------------------
+    def step_fresh(self) -> None:
+        c = self.cfg
+        lat = self.lat.sample(self.rng)
+        alive = np.array([self._alive(j, self.clock) for j in
+                          range(c.n_agents)])
+        # byzantine agents arrive first (adversarial worst case)
+        order_key = lat.copy()
+        for j in c.byz_ids:
+            order_key[j] = 0.0
+        order_key[~alive] = np.inf
+        n_alive = int(alive.sum())
+        wait_for = min(c.n_agents - c.r, n_alive)  # elastic degrade
+        order = np.argsort(order_key)
+        chosen = order[:wait_for]
+        received = np.zeros(c.n_agents, bool)
+        received[chosen] = True
+        round_time = float(np.max(order_key[chosen])) if wait_for else 0.0
+
+        g = np.zeros((c.n_agents, self.x.size))
+        for j in np.nonzero(received)[0]:
+            g[j] = self._send(j, self.x)
+        agg = self.rule(np.asarray(g, np.float64), received)
+        self._apply(np.asarray(agg), c.step_size(self.t))
+        self.t += 1
+        self._record(round_time, 0.0, wait_for)
+
+    # ------------------------------------------------------------------
+    def step_stale(self) -> None:
+        c = self.cfg
+        t = self.t
+        self._x_hist[t] = self.x.copy()
+        # prune history beyond tau
+        for k in list(self._x_hist):
+            if k < t - c.tau - 1:
+                del self._x_hist[k]
+        start = self.clock
+
+        # agents idle at iteration start pick up x^t
+        for j in range(c.n_agents):
+            if self._working_on[j] < 0 and self._alive(j, self.clock):
+                self._working_on[j] = t
+                self._busy_until[j] = self.clock + float(
+                    self.lat.sample(self.rng)[j])
+
+        def usable() -> int:
+            return int(np.sum(self._ledger_ts >= t - c.tau))
+
+        # advance the event clock delivery-by-delivery until rule-15's
+        # wait condition |T^t| >= n - r holds
+        guard = 0
+        while usable() < c.n_agents - c.r:
+            busy = [j for j in range(c.n_agents) if self._working_on[j] >= 0]
+            if not busy:
+                break
+            jn = min(busy, key=lambda j: self._busy_until[j])
+            now = self._busy_until[jn]
+            self.clock = max(self.clock, now)
+            ts = int(self._working_on[jn])
+            xs = self._x_hist.get(ts)
+            if xs is not None:
+                self._ledger_g[jn] = self._send(jn, xs)
+                self._ledger_ts[jn] = ts
+            if self._alive(jn, self.clock):
+                self._working_on[jn] = t
+                self._busy_until[jn] = self.clock + float(
+                    self.lat.sample(self.rng)[jn])
+            else:
+                self._working_on[jn] = -1
+            guard += 1
+            if guard > 100 * c.n_agents:
+                break
+
+        received = self._ledger_ts >= t - c.tau
+        agg = self.rule(np.asarray(self._ledger_g, np.float64), received)
+        ages = (t - self._ledger_ts)[received]
+        self._apply(np.asarray(agg), c.step_size(t))
+        self.t += 1
+        self._record(self.clock - start,
+                     float(ages.mean()) if ages.size else 0.0,
+                     int(received.sum()))
+
+    # ------------------------------------------------------------------
+    def run(self, iters: int) -> History:
+        for _ in range(iters):
+            if self.cfg.mode == "stale":
+                self.step_stale()
+            else:
+                self.step_fresh()
+        return self.hist

@@ -1,0 +1,111 @@
+"""Gradient aggregation rules (GradAgg, paper eq. (10)).
+
+All rules operate on a stack of per-agent gradients ``g: (n, d)`` plus a
+boolean ``received`` mask encoding S^t (|S^t| = n - r in Algorithm 1). They
+are pure jittable JAX; ``tree_agg`` lifts any rule to pytrees.
+
+Rules
+-----
+- ``agg_sum``           Algorithm 1, eq. (3):  sum over S^t.
+- ``agg_mean``          sum / |S^t| (the LR-rescaled variant used by D-SGD).
+- ``agg_cge``           CGE gradient filter (paper eq. (213)): sum of the
+                        m - f smallest-norm received gradients.
+- ``agg_trimmed_mean``  coordinate-wise trimmed mean (Yin et al. [55]).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+def agg_sum(g: jnp.ndarray, received: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(g * received[:, None].astype(g.dtype), axis=0)
+
+
+def agg_mean(g: jnp.ndarray, received: jnp.ndarray) -> jnp.ndarray:
+    s = agg_sum(g, received)
+    return s / jnp.maximum(jnp.sum(received.astype(g.dtype)), 1.0)
+
+
+def cge_mask(g: jnp.ndarray, received: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Boolean mask selecting the m-f smallest-norm received gradients,
+    where m = |received|. Non-received agents are never selected."""
+    n = g.shape[0]
+    norms = jnp.linalg.norm(g.astype(jnp.float32), axis=1)
+    norms = jnp.where(received, norms, BIG)
+    order = jnp.argsort(norms)                       # received first, by norm
+    m = jnp.sum(received.astype(jnp.int32))
+    keep_k = m - f                                   # smallest m-f norms
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n))
+    return (rank < keep_k) & received
+
+
+def agg_cge(g: jnp.ndarray, received: jnp.ndarray, f: int) -> jnp.ndarray:
+    return agg_sum(g, cge_mask(g, received, f))
+
+
+def agg_trimmed_mean(g: jnp.ndarray, received: jnp.ndarray,
+                     f: int) -> jnp.ndarray:
+    """Coordinate-wise: drop the f largest and f smallest received values
+    per coordinate, average the rest. Non-received values excluded."""
+    r = received[:, None].astype(g.dtype)
+    m = jnp.sum(received.astype(jnp.int32))
+    lo = jnp.where(received[:, None], g, BIG)
+    hi = jnp.where(received[:, None], g, -BIG)
+    srt_lo = jnp.sort(lo, axis=0)                    # received ascending
+    ranks = jnp.arange(g.shape[0])[:, None]
+    keep = (ranks >= f) & (ranks < m - f)            # trim f per side
+    total = jnp.sum(jnp.where(keep, srt_lo, 0.0), axis=0)
+    cnt = jnp.maximum(m - 2 * f, 1)
+    del hi
+    return total / cnt.astype(g.dtype)
+
+
+def make_gradagg(rule: str, f: int = 0) -> Callable:
+    if rule == "sum":
+        return agg_sum
+    if rule == "mean":
+        return agg_mean
+    if rule == "cge":
+        return functools.partial(agg_cge, f=f)
+    if rule == "trimmed_mean":
+        return functools.partial(agg_trimmed_mean, f=f)
+    raise ValueError(rule)
+
+
+# ---------------------------------------------------------------------------
+# pytree lifting
+
+
+def tree_agg(rule: Callable, grads_stacked, received):
+    """grads_stacked: pytree with leading agent axis on every leaf."""
+    leaves, treedef = jax.tree.flatten(grads_stacked)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+    agg = rule(flat, received)
+    out, off = [], 0
+    for l in leaves:
+        sz = l[0].size
+        out.append(agg[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def project_ball(x: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Euclidean projection onto W = {x : ||x|| <= gamma} (paper eq. (3))."""
+    nrm = jnp.linalg.norm(x)
+    return x * jnp.minimum(1.0, gamma / jnp.maximum(nrm, 1e-30))
+
+
+def tree_project_ball(tree, gamma: float):
+    leaves, treedef = jax.tree.flatten(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    scale = jnp.minimum(1.0, gamma / jnp.maximum(jnp.sqrt(sq), 1e-30))
+    return jax.tree.unflatten(treedef,
+                              [(l * scale).astype(l.dtype) for l in leaves])

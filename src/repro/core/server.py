@@ -1,0 +1,70 @@
+"""AsyncDGDServer — operational facade over the async engine.
+
+Adds the production concerns around Algorithm 1: state snapshot/restore
+(checkpoint-restart fault tolerance for the *server*), mid-run
+reconfiguration (change r / rule / step size = elastic policy changes), and
+run segments. Used by the fault-tolerance tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.async_engine import (AsyncEngine, EngineConfig, History,
+                                     LatencyModel)
+
+
+class AsyncDGDServer:
+    def __init__(self, grad_fn, x0, cfg: EngineConfig,
+                 latency: Optional[LatencyModel] = None, loss_fn=None,
+                 x_star=None):
+        self._mk = dict(grad_fn=grad_fn, latency=latency, loss_fn=loss_fn,
+                        x_star=x_star)
+        self.engine = AsyncEngine(grad_fn, x0, cfg, latency, loss_fn, x_star)
+
+    # -- checkpoint / restart -------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        e = self.engine
+        return {
+            "x": e.x.copy(), "t": e.t, "clock": e.clock,
+            "cfg": dataclasses.asdict(
+                dataclasses.replace(e.cfg, step_size=None)),  # fn not stored
+            "ledger_ts": e._ledger_ts.copy(),
+            "ledger_g": e._ledger_g.copy(),
+            "busy_until": e._busy_until.copy(),
+            "working_on": e._working_on.copy(),
+            "rng_state": e.rng.bit_generator.state,
+        }
+
+    def restore(self, snap: Dict[str, Any], cfg: EngineConfig) -> None:
+        """Rebuild the engine from a snapshot. ``cfg`` supplies the
+        non-serializable step_size fn (and may change r/rule — elastic)."""
+        e = AsyncEngine(self._mk["grad_fn"], snap["x"], cfg,
+                        self._mk["latency"], self._mk["loss_fn"],
+                        self._mk["x_star"])
+        e.t = snap["t"]
+        e.clock = snap["clock"]
+        e._ledger_ts = snap["ledger_ts"].copy()
+        e._ledger_g = snap["ledger_g"].copy()
+        e._busy_until = snap["busy_until"].copy()
+        e._working_on = snap["working_on"].copy()
+        e.rng.bit_generator.state = snap["rng_state"]
+        self.engine = e
+
+    # -- elastic reconfiguration ----------------------------------------
+    def reconfigure(self, **changes) -> None:
+        """Change r / rule / tau / crash schedule mid-run without losing
+        optimizer progress (the paper's theory holds per-iteration for any
+        S^t, so online changes of r are sound)."""
+        snap = self.snapshot()
+        cfg = dataclasses.replace(self.engine.cfg, **changes)
+        self.restore(snap, cfg)
+
+    def run(self, iters: int) -> History:
+        return self.engine.run(iters)
+
+    @property
+    def x(self) -> np.ndarray:
+        return self.engine.x

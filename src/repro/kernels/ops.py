@@ -1,0 +1,61 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU these call the kernels; elsewhere (this CPU container) they fall
+back to ``interpret=True`` (tests) or the jnp reference (production CPU
+path — the dry-run/roofline path never routes through Pallas, see
+DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import cge_norms as _cn
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto"):
+    """q,k: (B,H,S,D); v: (B,H,T,Dv)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.ref_flash_attention(q, k, v, causal=causal)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def block_sq_norms(x, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.ref_block_sq_norms(x)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _cn.block_sq_norms(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def masked_scale(x, scale, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.ref_masked_scale(x, scale)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _cn.masked_scale(x, scale, interpret=interpret)
+
+
+def tree_bucket(tree, width: int = 2048):
+    """Flatten a gradient pytree into (n_buckets, width) rows (zero-padded)
+    — the layout the CGE kernels consume."""
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.bfloat16)
+                            for l in jax.tree.leaves(tree)])
+    n = flat.size
+    rows = -(-n // width)
+    pad = rows * width - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, width), n

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True):
+    """q,k: (B,H,S,D); v: (B,H,T,Dv) -> (B,H,S,Dv). fp32 softmax."""
+    d = q.shape[-1]
+    s_ = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        sq, t = q.shape[2], k.shape[2]
+        mask = jnp.arange(t)[None, :] <= jnp.arange(sq)[:, None]
+        s_ = jnp.where(mask[None, None], s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhst,bhtv->bhsv", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_block_sq_norms(x):
+    """x: (n, w) -> (n,) fp32 squared norms."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=1)
+
+
+def ref_masked_scale(x, scale):
+    return (x.astype(jnp.float32) * scale[:, None]).astype(x.dtype)

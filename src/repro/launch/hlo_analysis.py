@@ -1,0 +1,465 @@
+"""While-aware analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**; our
+models scan over layers (and over sequence chunks), so FLOPs / HBM bytes /
+collective bytes would be undercounted by the trip count (24-60x for the
+assigned archs). This module parses the optimized HLO, walks the call graph
+and multiplies loop bodies by their ``known_trip_count``.
+
+Accounting (per device — post-SPMD HLO shapes are per-partition):
+- flops: dot ops: 2 * prod(result) * prod(lhs contracting dims). Covers
+  >99% of model FLOPs (elementwise ignored, convs not used in LM cells).
+- hbm bytes: fusion-boundary accounting — for each materialized op:
+  result bytes + operand bytes; fusion interiors are not double counted
+  (that is XLA's own "bytes accessed" convention).
+- collective wire bytes by kind: all-reduce 2x result (ring), all-gather /
+  all-to-all / collective-permute 1x max(result, operand),
+  reduce-scatter 1x operand.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+                "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(
+    r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$")
+
+_KIND_RE = re.compile(
+    r"^(?P<restype>.*?)\s*(?P<kind>[a-z][a-z0-9\-]*)\(")
+
+# convert / reshape / dynamic-slice are free: on the TPU target converts
+# fuse into their consumers (bf16 dots are native — the standalone f32
+# round-trips are XLA-CPU emulation artifacts), reshapes are bitcasts, and
+# scan-body dynamic-slices alias the loop buffer. Their *consumers* still
+# count the buffers as operands, so real traffic is charged exactly once.
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+            "bitcast", "after-all", "add-dependency", "partition-id",
+            "replica-id", "iota", "broadcast", "convert", "reshape",
+            "dynamic-slice"}
+
+CONTROL_OPS = {"while", "conditional", "call", "fusion", "sort", "reduce",
+               "reduce-window", "scatter", "map", "select-and-scatter",
+               "all-reduce", "reduce-scatter", "custom-call",
+               "async-start"}
+
+
+def _shape_elems_bytes(txt: str) -> Tuple[int, int]:
+    elems = bytes_ = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group("dims").split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    restype: str
+    args: List[str]
+    line: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    root: Optional[str] = None
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0})
+    coll_count: float = 0.0
+    unknown_trip: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in self.coll:
+            self.coll[k] += mult * other.coll[k]
+        self.coll_count += mult * other.coll_count
+        self.unknown_trip += other.unknown_trip
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith(("HloModule", "//", "#")):
+            continue
+        # computation header: "%name (args) -> type {" or "ENTRY %name ..."
+        if s.endswith("{") and ("(" in s) and "=" not in s.split("(")[0]:
+            hdr = s.split("(")[0].strip()
+            is_entry = hdr.startswith("ENTRY")
+            name = hdr.replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = Computation(name=name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, rest = m.group("name"), m.group("rest")
+        if s.startswith("ROOT"):
+            cur.root = name
+        km = _KIND_RE.match(rest)
+        if not km:
+            continue
+        kind = km.group("kind")
+        restype = km.group("restype")
+        # operand names: inside first balanced paren group
+        tail = rest[km.end():]
+        depth, j = 1, 0
+        for j, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        argtxt = tail[:j]
+        attrs = tail[j + 1:]
+        args = re.findall(r"%([\w.\-]+)", argtxt)
+        op = Op(name=name, kind=kind, restype=restype, args=args,
+                line=s, attrs=attrs)
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps, entry
+
+
+def _result_bytes(op: Op) -> int:
+    return _shape_elems_bytes(op.restype)[1]
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    total = 0
+    for a in op.args:
+        src = comp.ops.get(a)
+        if src is not None:
+            total += _result_bytes(src)
+    return total
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALLS_RE = re.compile(r'calls=%?([\w.\-]+)')
+_BODY_RE = re.compile(r'body=%?([\w.\-]+)')
+_COND_RE = re.compile(r'condition=%?([\w.\-]+)')
+_BRANCH_RE = re.compile(r'branch_computations=\{([^}]*)\}')
+_CDIMS_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(op.restype)
+    k = 1
+    m = _CDIMS_RE.search(op.attrs)
+    lhs = comp.ops.get(op.args[0]) if op.args else None
+    if m and lhs is not None:
+        sm = _SHAPE_RE.search(lhs.restype)
+        if sm:
+            dims = [int(d) for d in sm.group("dims").split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci:
+                    i = int(ci)
+                    if i < len(dims):
+                        k *= dims[i]
+    return 2.0 * res_elems * k
+
+
+def _collective_wire(op: Op, comp: Computation) -> Tuple[str, float]:
+    base = op.kind.replace("-start", "")
+    res = _result_bytes(op)
+    arg = _operand_bytes(op, comp)
+    if base == "all-reduce":
+        return base, 2.0 * res
+    if base == "reduce-scatter":
+        return base, float(max(arg, res))
+    return base, float(max(res, arg))
+
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self._dus_memo: Dict[str, bool] = {}
+
+    def _fusion_operand_bytes(self, op: Op, comp: Computation,
+                              callee: Optional[str]) -> list:
+        """Per-operand billed bytes for a fusion: if a parameter is only
+        consumed by dynamic-slice ops inside the callee, bill the slice
+        sizes (the loop reads a window, not the array)."""
+        out = []
+        cal = self.comps.get(callee) if callee else None
+        params: Dict[int, str] = {}
+        if cal is not None:
+            for on in cal.order:
+                o = cal.ops[on]
+                if o.kind == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", o.line)
+                    if m:
+                        params[int(m.group(1))] = on
+        for i, a in enumerate(op.args):
+            src = comp.ops.get(a)
+            full = _result_bytes(src) if src else 0
+            billed = full
+            pname = params.get(i)
+            if cal is not None and pname is not None and full:
+                consumers = [cal.ops[on] for on in cal.order
+                             if pname in cal.ops[on].args]
+                if consumers and all(c.kind == "dynamic-slice"
+                                     for c in consumers):
+                    billed = sum(_result_bytes(c) for c in consumers)
+            out.append(billed)
+        return out
+
+    def _root_is_dus(self, cname: str) -> bool:
+        """Is the computation's root a dynamic-update-slice (an in-place
+        buffer-update fusion — KV-cache writes)? Chases the root through
+        pass-through ops (bitcast/copy/convert/tuple)."""
+        if cname in self._dus_memo:
+            return self._dus_memo[cname]
+        comp = self.comps.get(cname)
+        out = False
+        if comp is not None:
+            cur = comp.root or (comp.order[-1] if comp.order else None)
+            seen = 0
+            while cur is not None and seen < 10:
+                op = comp.ops.get(cur)
+                if op is None:
+                    break
+                if op.kind == "dynamic-update-slice":
+                    out = True
+                    break
+                if op.kind in ("bitcast", "copy", "convert", "tuple",
+                               "reshape") and op.args:
+                    cur = op.args[0]
+                    seen += 1
+                    continue
+                break
+        self._dus_memo[cname] = out
+        return out
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self._comp_cost(self.entry, count_bytes=True)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, cname: str, count_bytes: bool) -> Cost:
+        key = (cname, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(cname)
+        c = Cost()
+        self._memo[key] = c
+        if comp is None:
+            return c
+        for opname in comp.order:
+            op = comp.ops[opname]
+            kind = op.kind
+            if kind in FREE_OPS:
+                continue
+            if kind.endswith("-done"):
+                continue
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES:
+                k, wire = _collective_wire(op, comp)
+                c.coll[k] += wire
+                c.coll_count += 1
+                if count_bytes:
+                    c.bytes += _result_bytes(op) + _operand_bytes(op, comp)
+                continue
+            if kind == "while":
+                bm = _BODY_RE.search(op.attrs)
+                cm = _COND_RE.search(op.attrs)
+                tm = _TRIP_RE.search(op.line)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    c.unknown_trip += 1
+                if bm:
+                    c.add(self._comp_cost(bm.group(1), count_bytes), trips)
+                if cm:
+                    c.add(self._comp_cost(cm.group(1), False), trips)
+                continue
+            if kind == "conditional":
+                brm = _BRANCH_RE.search(op.attrs)
+                if brm:
+                    subs = re.findall(r"%?([\w.\-]+)", brm.group(1))
+                    costs = [self._comp_cost(s, count_bytes) for s in subs]
+                    if costs:
+                        best = max(costs, key=lambda x: x.flops + x.bytes)
+                        c.add(best)
+                if count_bytes:
+                    c.bytes += _result_bytes(op) + _operand_bytes(op, comp)
+                continue
+            if kind in ("fusion", "call", "custom-call", "async-start"):
+                cm2 = _CALLS_RE.search(op.attrs)
+                callee = cm2.group(1) if cm2 else None
+                if callee:
+                    # fusion boundary: interior flops/collectives counted,
+                    # interior bytes NOT (they stay in registers/VMEM)
+                    c.add(self._comp_cost(callee, False))
+                if count_bytes:
+                    opnds = self._fusion_operand_bytes(op, comp, callee)
+                    if callee and self._root_is_dus(callee):
+                        # in-place buffer update (KV-cache write etc.):
+                        # the big aliased buffer is neither read nor
+                        # rewritten — only the update slice moves.
+                        big = max(opnds, default=0)
+                        c.bytes += 2 * (sum(opnds) - big)
+                    else:
+                        c.bytes += _result_bytes(op) + sum(opnds)
+                continue
+            if kind == "dynamic-update-slice":
+                if count_bytes and len(op.args) > 1:
+                    upd = comp.ops.get(op.args[1])
+                    c.bytes += 2 * (_result_bytes(upd) if upd else 0)
+                continue
+            if kind == "gather":
+                if count_bytes:
+                    c.bytes += 2 * _result_bytes(op)
+                continue
+            if kind == "scatter":
+                if count_bytes and op.args:
+                    upd = comp.ops.get(op.args[-1])
+                    c.bytes += 3 * (_result_bytes(upd) if upd else 0)
+                continue
+            if kind == "dot":
+                c.flops += _dot_flops(op, comp)
+                if count_bytes:
+                    c.bytes += _result_bytes(op) + _operand_bytes(op, comp)
+                continue
+            if kind == "convolution":
+                # rough: 2 * result * (operand1 elems / out_channels)
+                res_e, _ = _shape_elems_bytes(op.restype)
+                w = comp.ops.get(op.args[1]) if len(op.args) > 1 else None
+                k = 1
+                if w is not None:
+                    we, _ = _shape_elems_bytes(w.restype)
+                    k = max(we // max(res_e, 1), 1)
+                c.flops += 2.0 * res_e * k
+                if count_bytes:
+                    c.bytes += _result_bytes(op) + _operand_bytes(op, comp)
+                continue
+            # default: materialized elementwise / data-movement op
+            if count_bytes:
+                c.bytes += _result_bytes(op) + _operand_bytes(op, comp)
+        return c
+
+
+def analyze(text: str) -> Dict:
+    hc = HloCost(text)
+    c = hc.total()
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.bytes,
+        "collective_bytes": c.coll_bytes,
+        "collectives": dict(c.coll),
+        "collective_count": c.coll_count,
+        "unknown_trip_counts": c.unknown_trip,
+    }
+
+
+def breakdown(text: str, top: int = 20):
+    """Top HBM-byte contributors as the analyzer counts them (debug/perf
+    tool; used by the hillclimb loop to find the dominant-term causes)."""
+    hc = HloCost(text)
+    # computation multipliers via the same walk
+    mult = {hc.entry: 1.0}
+    stack = [hc.entry]
+    while stack:
+        cn = stack.pop()
+        comp = hc.comps.get(cn)
+        if comp is None:
+            continue
+        for on in comp.order:
+            op = comp.ops[on]
+            if op.kind == "while":
+                tm = _TRIP_RE.search(op.line)
+                bm = _BODY_RE.search(op.attrs)
+                t = int(tm.group(1)) if tm else 1
+                if bm and bm.group(1) not in mult:
+                    mult[bm.group(1)] = mult[cn] * t
+                    stack.append(bm.group(1))
+            else:
+                m = _CALLS_RE.search(op.attrs)
+                if m and m.group(1) not in mult:
+                    mult[m.group(1)] = mult[cn]
+                    stack.append(m.group(1))
+    rows = []
+    for cn, mm in mult.items():
+        comp = hc.comps.get(cn)
+        if comp is None:
+            continue
+        for on in comp.order:
+            op = comp.ops[on]
+            kind = op.kind
+            if kind in FREE_OPS or kind.endswith("-done"):
+                continue
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES or kind in ("while", "conditional"):
+                continue
+            if kind == "dynamic-update-slice":
+                upd = comp.ops.get(op.args[1]) if len(op.args) > 1 else None
+                b = 2 * (_result_bytes(upd) if upd else 0)
+            elif kind == "gather":
+                b = 2 * _result_bytes(op)
+            elif kind == "scatter":
+                upd = comp.ops.get(op.args[-1]) if op.args else None
+                b = 3 * (_result_bytes(upd) if upd else 0)
+            elif kind in ("fusion", "call", "custom-call", "async-start"):
+                cm2 = _CALLS_RE.search(op.attrs)
+                callee = cm2.group(1) if cm2 else None
+                opnds = hc._fusion_operand_bytes(op, comp, callee)
+                if callee and hc._root_is_dus(callee):
+                    b = 2 * (sum(opnds) - max(opnds, default=0))
+                else:
+                    b = _result_bytes(op) + sum(opnds)
+            else:
+                b = _result_bytes(op) + _operand_bytes(op, comp)
+            if b:
+                rows.append((b * mm, kind, int(mm), op.restype[:60],
+                             op.name[:50], cn[:40]))
+    rows.sort(reverse=True)
+    return rows[:top]

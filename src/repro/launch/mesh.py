@@ -1,0 +1,32 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) ("data","model") = 256 chips (TPU v5e pod).
+    Multi-pod: (2,16,16) ("pod","data","model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, data: int = 4, model: int = 2, pod: int = 1):
+    """Small mesh for CPU integration tests (requires
+    --xla_force_host_platform_device_count >= data*model*pod)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axis_names(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_agents_of(mesh) -> int:
+    n = 1
+    for a in dp_axis_names(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,81 @@
+"""Serving steps: prefill (builds the KV/SSM cache) and decode (one token).
+
+Inference has no gradient aggregation, so the paper's technique is N/A at
+the step level (DESIGN.md §4); the serving-side straggler story is request
+re-dispatch in the async engine. These steps are what decode_32k /
+long_500k / prefill_32k dry-run and roofline.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import apply_model
+
+
+def _ctx(dp, tp, sizes=None):
+    import contextlib
+    from repro.dist.act_sharding import act_policy
+    return act_policy(dp, tp, sizes) if dp is not None \
+        else contextlib.nullcontext()
+
+
+def make_prefill_step(cfg: ArchConfig, moe_groups: int = 1,
+                      dp=None, tp=None, sizes=None) -> Callable:
+    def prefill(params, batch):
+        with _ctx(dp, tp, sizes):
+            logits, _, cache = apply_model(
+                params, batch["tokens"], cfg, mode="prefill",
+                enc_embed=batch.get("enc_embed"), moe_groups=moe_groups,
+                remat_policy="none")
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, moe_groups: int = 1,
+                     temperature: float = 0.0, dp=None, tp=None,
+                     sizes=None) -> Callable:
+    def decode(params, batch):
+        with _ctx(dp, tp, sizes):
+            logits, _, cache = apply_model(
+                params, batch["tokens"], cfg, mode="decode",
+                cache=batch["cache"], cache_index=batch["pos"],
+                moe_groups=moe_groups, remat_policy="none")
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
+                    steps: int):
+    """Tiny CPU-scale generation driver used by examples/tests."""
+    from repro.models.model import init_cache
+    b = prompt.shape[0]
+    _, _, cache = apply_model(params, prompt, cfg, mode="prefill")
+    # pad prefill cache out to max_len along the seq axis
+    s0 = prompt.shape[1]
+
+    def pad(c):
+        if c.ndim >= 3 and c.shape[2] == s0:
+            pw = [(0, 0)] * c.ndim
+            pw[2] = (0, max_len - s0)
+            return jnp.pad(c, pw)
+        return c
+    cache = jax.tree.map(pad, cache)
+    decode = jax.jit(make_decode_step(cfg))
+    toks = [prompt]
+    logits, _, _ = apply_model(params, prompt, cfg, mode="train")
+    cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for i in range(steps):
+        toks.append(cur)
+        cur, cache = decode(params, {"tokens": cur, "cache": cache,
+                                     "pos": jnp.int32(s0 + i)})
+        cur = cur[:, None]
+    return jnp.concatenate(toks, axis=1)

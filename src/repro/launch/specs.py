@@ -1,0 +1,87 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input — the
+dry-run lowers against these (weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import init_model, init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def max_pos_for(shape: ShapeConfig) -> int:
+    return max(32768, shape.seq_len + 1)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      n_agents: int) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((b, s), jnp.int32),
+        "targets": SDS((b, s), jnp.int32),
+        # per-token loss weights: padding mask * Algorithm-1 agent mask
+        "weights": SDS((b, s), jnp.float32),
+    }
+    if cfg.encoder_decoder:
+        batch["enc_embed"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))
+    if cfg.frontend == "vision":
+        # stubbed patch embeddings prepended by the (stub) projector
+        batch["vision_embed"] = SDS((b, 0, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+    del n_agents
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": SDS((b, 1), jnp.int32),
+        "cache": init_cache(cfg, b, s, abstract=True),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.encoder_decoder:
+        out["enc_embed"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                               jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def state_specs(cfg: ArchConfig, shape: ShapeConfig,
+                optimizer: str = "adamw") -> Dict[str, Any]:
+    """Abstract train state (params + optimizer moments + step)."""
+    params = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg,
+                           max_pos=max_pos_for(shape)))
+    state: Dict[str, Any] = {"params": params,
+                             "step": SDS((), jnp.int32)}
+    if optimizer == "adamw":
+        moments = jax.tree.map(
+            lambda l: SDS(l.shape, jnp.float32), params)
+        state["opt"] = {"m": moments, "v": moments}
+    elif optimizer == "sgdm":
+        state["opt"] = {"m": params}
+    else:
+        state["opt"] = {}
+    return state
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, n_agents: int,
+                kind: str | None = None) -> Dict[str, Any]:
+    kind = kind or shape.kind
+    if kind == "train":
+        return train_batch_specs(cfg, shape, n_agents)
+    if kind == "prefill":
+        return prefill_specs(cfg, shape)
+    if kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(kind)

@@ -1,0 +1,54 @@
+"""LeNet with exactly 431,080 learnable parameters — the paper's §5 model.
+
+Caffe-LeNet variant: conv(1->20,5x5) -> maxpool2 -> conv(20->50,5x5) ->
+maxpool2 -> fc(800->500) -> fc(500->10).
+520 + 25,050 + 400,500 + 5,010 = 431,080 params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_lenet import LeNetConfig
+
+
+def init_lenet(rng, cfg: LeNetConfig = LeNetConfig()):
+    ks = jax.random.split(rng, 4)
+
+    def conv_init(k, h, w, cin, cout):
+        std = (h * w * cin) ** -0.5
+        return jax.random.normal(k, (h, w, cin, cout), jnp.float32) * std
+
+    def fc_init(k, din, dout):
+        return jax.random.normal(k, (din, dout), jnp.float32) * din ** -0.5
+
+    return {
+        "c1": {"w": conv_init(ks[0], 5, 5, 1, 20), "b": jnp.zeros(20)},
+        "c2": {"w": conv_init(ks[1], 5, 5, 20, 50), "b": jnp.zeros(50)},
+        "f1": {"w": fc_init(ks[2], 800, 500), "b": jnp.zeros(500)},
+        "f2": {"w": fc_init(ks[3], 500, 10), "b": jnp.zeros(10)},
+    }
+
+
+def _maxpool2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def apply_lenet(params, images):
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["c1"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["c1"]["b"]
+    x = _maxpool2(jax.nn.relu(x))                  # (B,12,12,20)
+    x = jax.lax.conv_general_dilated(
+        x, params["c2"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["c2"]["b"]
+    x = _maxpool2(jax.nn.relu(x))                  # (B,4,4,50)
+    x = x.reshape(x.shape[0], -1)                  # (B,800)
+    x = jax.nn.relu(x @ params["f1"]["w"] + params["f1"]["b"])
+    return x @ params["f2"]["w"] + params["f2"]["b"]
+
+
+def param_count(params) -> int:
+    return sum(l.size for l in jax.tree.leaves(params))

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts: top-k token-choice routing with capacity binning.
+
+Dispatch is *grouped*: tokens are split into ``n_groups`` contiguous groups
+(one per data-parallel agent at scale, 1 on CPU smoke tests) and routing /
+capacity are resolved within each group. With groups mapped to the "data"
+mesh axis and the expert dimension to "model", the gather/scatter stays
+local to a DP shard and the only collective the combine needs is the same
+all-reduce a tensor-parallel dense MLP would issue.
+
+Sort-based binning (argsort by expert id) instead of the one-hot
+(T, E, C) dispatch tensor: memory O(E*C*d) instead of O(T*E*C).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.dist.act_sharding import constrain
+from repro.models.layers import dense_init, init_mlp, apply_mlp, _dtype
+
+
+def init_moe(rng, cfg: ArchConfig, moe: MoEConfig):
+    d, dt = cfg.d_model, _dtype(cfg)
+    e, ff = moe.num_experts, moe.d_ff_expert
+    ks = jax.random.split(rng, 6)
+
+    def stack(k, d_in, d_out):
+        std = 1.0 / (d_in ** 0.5)
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                * std).astype(dt)
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": stack(ks[1], d, ff),
+        "w_up": stack(ks[2], d, ff),
+        "w_down": stack(ks[3], ff, d),
+    }
+    if moe.num_shared_experts:
+        # shared experts fused into one dense SwiGLU of width n_shared*ff
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=moe.num_shared_experts * ff)
+    if moe.dense_residual:
+        p["dense"] = init_mlp(ks[5], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def _capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    c = int(tokens_per_group * moe.top_k * moe.capacity_factor
+            / moe.num_experts) + 1
+    return max(c, 4)
+
+
+def _dispatch_indices(top_i, top_w, e: int, c: int):
+    """top_i/top_w: (T,K). Returns token_map (E,C), weight_map (E,C),
+    valid (E,C)."""
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                        # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts              # (E,)
+    pos = jnp.arange(t * k) - starts[se]              # rank within expert
+    valid = pos < c
+    lin = jnp.where(valid, se * c + pos, e * c)       # overflow slot
+    token_map = jnp.zeros((e * c + 1,), jnp.int32).at[lin].set(st)[:-1]
+    weight_map = jnp.zeros((e * c + 1,), flat_w.dtype).at[lin].set(sw)[:-1]
+    valid_map = jnp.zeros((e * c + 1,), jnp.bool_).at[lin].set(True)[:-1]
+    return (token_map.reshape(e, c), weight_map.reshape(e, c),
+            valid_map.reshape(e, c))
+
+
+def _moe_group(p, xg, moe: MoEConfig, c: int):
+    """xg: (T, d) one dispatch group."""
+    t, d = xg.shape
+    e, k = moe.num_experts, moe.top_k
+    logits = jnp.einsum("td,de->te", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)            # (T,K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    token_map, weight_map, valid = _dispatch_indices(top_i, top_w, e, c)
+    xe = jnp.take(xg, token_map.reshape(-1), axis=0).reshape(e, c, d)
+    xe = xe * valid[..., None].astype(xg.dtype)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = ye * (weight_map[..., None].astype(xg.dtype)
+               * valid[..., None].astype(xg.dtype))
+
+    out = jnp.zeros_like(xg).at[token_map.reshape(-1)].add(
+        ye.reshape(e * c, d))
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1))
+    pe = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * pe)
+    return out, aux
+
+
+def apply_moe(p, x, cfg: ArchConfig, moe: MoEConfig,
+              n_groups: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (B,S,d), aux_loss scalar."""
+    b, s, d = x.shape
+    tokens = b * s
+    if tokens % n_groups:
+        n_groups = 1
+    tpg = tokens // n_groups
+    c = _capacity(tpg, moe)
+    xg = constrain(x.reshape(n_groups, tpg, d), "moe_tokens")
+    out, aux = jax.vmap(lambda xx: _moe_group(p, xx, moe, c))(xg)
+    out = constrain(out, "moe_tokens").reshape(b, s, d)
+    if moe.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    if moe.dense_residual:
+        out = out + apply_mlp(p["dense"], x, cfg)
+    return out, jnp.mean(aux)

@@ -1,0 +1,332 @@
+"""State-space mixers: Mamba-1 selective scan (Jamba) and RWKV-6 Finch.
+
+Training/prefill use a chunked associative scan (memory O(B*chunk*d*N) per
+step instead of O(B*S*d*N)); decode is a single O(1) state update. Both are
+pure JAX (``lax.scan`` / ``lax.associative_scan``); the HLO stays a compact
+while-loop so the 512-device dry-run compiles quickly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.act_sharding import constrain
+from repro.models.layers import dense_init, apply_group_norm, _dtype
+
+SCAN_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# linear-recurrence helpers
+
+
+def chunked_linear_scan(a, b, h0, chunk: int = SCAN_CHUNK):
+    """h_t = a_t * h_{t-1} + b_t, scanned along axis 1 of (B,S,...).
+
+    Returns (h_all (B,S,...), h_last). Memory peak O(B*chunk*...).
+    """
+    bsz, s = a.shape[0], a.shape[1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def body(h, i):
+        # slice chunks by index (a pre-transposed xs would materialize a
+        # full transposed copy — on XLA-CPU as a trip-count×DUS loop)
+        ai = jax.lax.dynamic_slice_in_dim(a, i * c, c, axis=1)
+        bi = jax.lax.dynamic_slice_in_dim(b, i * c, c, axis=1)
+        pa, pb = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        hs = pb + pa * h[:, None]
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, jnp.arange(n))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((bsz, s) + a.shape[2:])
+    return hs, h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    r = cfg.ssm.dt_rank
+    return r if r else math.ceil(cfg.d_model / 16)
+
+
+def init_mamba(rng, cfg: ArchConfig):
+    ssm = cfg.ssm
+    d, dt = cfg.d_model, _dtype(cfg)
+    di = ssm.expand * d
+    rank = _dt_rank(cfg)
+    ks = jax.random.split(rng, 6)
+    a = jnp.broadcast_to(jnp.arange(1, ssm.d_state + 1, dtype=jnp.float32),
+                         (di, ssm.d_state))
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, rank + 2 * ssm.d_state, dt),
+        "dt_w": dense_init(ks[3], rank, di, dt),
+        "dt_b": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "a_log": jnp.log(a),                          # fp32
+        "d": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _mamba_conv_train(p, xh, cfg):
+    """Causal depthwise conv over seq. xh: (B,S,di)."""
+    w = p["conv_w"].astype(xh.dtype)                  # (K, di)
+    k = w.shape[0]
+    pad = jnp.pad(xh, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xh.shape[1], :] * w[i] for i in range(k))
+    return out + p["conv_b"].astype(xh.dtype)
+
+
+def apply_mamba(p, x, cfg: ArchConfig, *, cache=None, return_cache=False):
+    """x: (B,S,d). cache: {"h": (B,di,N), "conv": (B,K-1,di)} for decode."""
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    di = ssm.expand * d
+    n = ssm.d_state
+    rank = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xh, z = constrain(xz[..., :di], "ffn"), constrain(xz[..., di:], "ffn")
+
+    decode = cache is not None and s == 1
+    if decode:
+        k = p["conv_w"].shape[0]
+        window = jnp.concatenate([cache["conv"], xh], axis=1)  # (B,K,di)
+        new_conv = window[:, 1:]
+        xh = (jnp.einsum("bkd,kd->bd", window,
+                         p["conv_w"].astype(xh.dtype))[:, None]
+              + p["conv_b"].astype(xh.dtype))
+    else:
+        xh = _mamba_conv_train(p, xh, cfg)
+    xh = jax.nn.silu(xh.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bsd,de->bse", xh, p["x_proj"])
+    dt_in, b_, c_ = (dbc[..., :rank], dbc[..., rank:rank + n],
+                     dbc[..., rank + n:])
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_w"]).astype(jnp.float32)
+        + p["dt_b"])                                   # (B,S,di) fp32
+    a = -jnp.exp(p["a_log"])                           # (di,N)
+    abar = jnp.exp(delta[..., None] * a)               # (B,S,di,N)
+    bx = (delta * xh.astype(jnp.float32))[..., None] \
+        * b_.astype(jnp.float32)[:, :, None, :]        # (B,S,di,N)
+
+    if decode:
+        h = abar[:, 0] * cache["h"] + bx[:, 0]         # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_.astype(jnp.float32)[:, 0])[:, None]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        h0 = (cache["h"] if cache is not None
+              else jnp.zeros((b, di, n), jnp.float32))
+        hs, h_last = chunked_linear_scan(abar, bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c_.astype(jnp.float32))
+        new_cache = None
+        if return_cache:
+            k = p["conv_w"].shape[0]
+            xz_tail = jnp.einsum("bsd,de->bse", x[:, -(k - 1):], p["w_in"])
+            new_cache = {"h": h_last, "conv": xz_tail[..., :di]}
+
+    y = y + p["d"] * xh.astype(jnp.float32)
+    y = (y.astype(x.dtype)
+         * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+
+
+def init_rwkv(rng, cfg: ArchConfig):
+    rw = cfg.rwkv
+    d, dt = cfg.d_model, _dtype(cfg)
+    h = d // rw.head_dim
+    ks = jax.random.split(rng, 12)
+    la, lw = rw.ddlerp_lora, rw.decay_lora
+    return {
+        # token-shift data-dependent lerp
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu": jnp.full((5, d), 0.5, dt),               # w,k,v,r,g
+        "dd_w1": dense_init(ks[0], d, 5 * la, dt),
+        "dd_w2": (jax.random.normal(ks[1], (5, la, d), jnp.float32)
+                  * 0.01).astype(dt),
+        # projections
+        "w_r": dense_init(ks[2], d, d, dt),
+        "w_k": dense_init(ks[3], d, d, dt),
+        "w_v": dense_init(ks[4], d, d, dt),
+        "w_g": dense_init(ks[5], d, d, dt),
+        "w_o": dense_init(ks[6], d, d, dt),
+        # data-dependent decay
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_a": dense_init(ks[7], d, lw, dt),
+        "w_b": dense_init(ks[8], lw, d, dt),
+        # per-head bonus
+        "u": (jax.random.normal(ks[9], (h, rw.head_dim), jnp.float32)
+              * 0.1).astype(jnp.float32),
+    }
+
+
+def init_rwkv_channel(rng, cfg: ArchConfig):
+    d, dt = cfg.d_model, _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        "cm_mu_k": jnp.full((d,), 0.5, dt),
+        "cm_mu_r": jnp.full((d,), 0.5, dt),
+        "cm_wr": dense_init(ks[0], d, d, dt),
+        "cm_wk": dense_init(ks[1], d, cfg.d_ff, dt),
+        "cm_wv": dense_init(ks[2], cfg.d_ff, d, dt),
+    }
+
+
+def _token_shift(x, last=None):
+    """xx_t = x_{t-1}; first position uses `last` (decode cache) or 0."""
+    if x.shape[1] == 1:
+        return last[:, None] if last is not None else jnp.zeros_like(x)
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        prev = prev.at[:, 0].set(last)
+    return prev
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """RWKV6 recurrence. r,k,v:(B,S,H,D); w:(B,S,H,D) decay in (0,1);
+    u:(H,D). State s:(B,H,D,D) keyed [key, value]. Returns (y, s_last)."""
+    def step(s, xs):
+        rt, kt, vt, wt = xs                            # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,Dk,Dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[:, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_last              # (B,S,H,D)
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int = 32):
+    """Chunked-parallel RWKV6 recurrence (matmul form, FLA-style).
+
+    Within a chunk of C steps the pairwise decay factor
+    prod_{u=s+1}^{t-1} w_u = exp(L_{t-1} - L_s) (L = cumsum log w) is
+    split exp(L_{t-1}-m)*exp(m-L_s) with the per-channel shift m = L_C/2,
+    keeping both factors inside fp32 range for C <= 32 even at extreme
+    data-dependent decays. Sequential depth drops S -> S/C and the inner
+    work becomes MXU-shaped (C x C x D matmuls) instead of S elementwise
+    state updates — the arithmetic-intensity fix for the rwkv train cells.
+    """
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # strictly lower
+
+    def body(state, i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * c, c, axis=1)
+        rc, kc, vc, wc = sl(r), sl(k), sl(v), sl(w)       # (B,C,H,D)
+        lw = jnp.log(jnp.maximum(wc, 1e-38))
+        big_l = jnp.cumsum(lw, axis=1)          # L_t (inclusive)
+        l_prev = big_l - lw                     # L_{t-1}
+        # chunk-start state contribution: decay prod_{u<t} w_u = exp(L_{t-1})
+        y_state = jnp.einsum("bchk,bhkv->bchv", rc * jnp.exp(l_prev), state)
+        # intra-chunk pairs (s < t)
+        m = big_l[:, -1:] * 0.5
+        qh = rc * jnp.exp(l_prev - m)
+        kh = kc * jnp.exp(m - big_l)
+        scores = jnp.einsum("bchk,bshk->bhcs", qh, kh) * tri[None, None]
+        y_intra = jnp.einsum("bhcs,bshv->bchv", scores, vc)
+        # diagonal (s = t) with the u bonus
+        dot = jnp.einsum("bchk,hk->bch", rc * kc, u)
+        y = y_state + y_intra + dot[..., None] * vc
+        # carry: state' = diag(exp(L_C)) state + sum_s exp(L_C - L_s) k_s v_s
+        kd = kc * jnp.exp(big_l[:, -1:] - big_l)
+        state = (jnp.exp(big_l[:, -1])[..., None] * state
+                 + jnp.einsum("bshk,bshv->bhkv", kd, vc))
+        return state, y
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    s_last, ys = jax.lax.scan(body, s0, jnp.arange(n))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, d), s_last
+
+
+def apply_rwkv_time(p, x, cfg: ArchConfig, *, cache=None,
+                    return_cache=False):
+    rw = cfg.rwkv
+    b, s, d = x.shape
+    h, hd = d // rw.head_dim, rw.head_dim
+
+    last = cache["tm_x"] if cache is not None else None
+    xx = _token_shift(x, last)
+    dx = xx - x
+    xbase = x + dx * p["mu_x"]
+    la = p["dd_w1"].shape[1] // 5
+    dd = jnp.tanh(jnp.einsum("bsd,de->bse", xbase, p["dd_w1"])
+                  .reshape(b, s, 5, la))
+    dd = jnp.einsum("bsfl,fld->bsfd", dd, p["dd_w2"])  # (B,S,5,d)
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu"][None, None] + dd)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = constrain(jnp.einsum("bsd,de->bse", xr, p["w_r"])
+                  .reshape(b, s, h, hd), "heads4")
+    k = constrain(jnp.einsum("bsd,de->bse", xk, p["w_k"])
+                  .reshape(b, s, h, hd), "heads4")
+    v = constrain(jnp.einsum("bsd,de->bse", xv, p["w_v"])
+                  .reshape(b, s, h, hd), "heads4")
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"])
+                    .astype(jnp.float32)).astype(x.dtype)
+
+    wdec = jnp.exp(-jnp.exp(
+        p["w0"]
+        + jnp.einsum("bsd,de->bse",
+                     jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_a"])),
+                     p["w_b"]).astype(jnp.float32))).reshape(b, s, h, hd)
+
+    s0 = (cache["wkv"] if cache is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+    ck = cfg.rwkv.chunk
+    if ck and s > 1 and s % min(ck, s) == 0:
+        y, s_last = _wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), wdec, p["u"], s0, chunk=ck)
+    else:
+        y, s_last = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), wdec, p["u"], s0)
+    y = apply_group_norm(y.astype(x.dtype), h)
+    y = (y.reshape(b, s, d) * g.reshape(b, s, d))
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    new_cache = None
+    if cache is not None or return_cache:
+        new_cache = {"wkv": s_last, "tm_x": x[:, -1]}
+    return out, new_cache
+
+
+def apply_rwkv_channel(p, x, cfg: ArchConfig, *, cache=None,
+                       return_cache=False):
+    last = cache["cm_x"] if cache is not None else None
+    xx = _token_shift(x, last)
+    dx = xx - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    k = constrain(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"]), "ffn")
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    out = r * jnp.einsum("bsf,fd->bsd", k, p["cm_wv"])
+    new_cache = None
+    if cache is not None or return_cache:
+        new_cache = {"cm_x": x[:, -1]}
+    return out, new_cache

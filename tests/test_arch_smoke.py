@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU; asserts shapes and no NaNs. Full configs are
+exercised only via the dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config, list_configs
+from repro.launch.train import TrainConfig, init_state, make_train_step
+from repro.models.model import apply_model, init_cache, init_model
+
+ARCHS = list_configs()
+
+
+def _data(cfg, rng, b=2, s=16):
+    tok = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    enc = (jax.random.normal(rng, (b, cfg.encoder_seq, cfg.d_model))
+           if cfg.encoder_decoder else None)
+    return tok, enc
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_model(rng, cfg, max_pos=64)
+    tok, enc = _data(cfg, rng)
+    logits, aux, _ = apply_model(params, tok, cfg, mode="train",
+                                 enc_embed=enc)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_updates_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    tc = TrainConfig(lr=1e-3, remat_policy="none")
+    rng = jax.random.PRNGKey(1)
+    state = init_state(rng, cfg, tc, max_pos=64)
+    tok, enc = _data(cfg, rng)
+    batch = {"tokens": tok, "targets": tok,
+             "weights": jnp.ones(tok.shape, jnp.float32)}
+    if enc is not None:
+        batch["enc_embed"] = enc
+    step = jax.jit(make_train_step(cfg, tc))
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:  # disable capacity drops for exactness
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    rng = jax.random.PRNGKey(2)
+    params = init_model(rng, cfg, max_pos=64)
+    b, s = 2, 16
+    tok, enc = _data(cfg, rng, b, s)
+    full, _, _ = apply_model(params, tok, cfg, mode="train", enc_embed=enc)
+    _, _, cache = apply_model(params, tok[:, :s - 1], cfg, mode="prefill",
+                              enc_embed=enc)
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, 1)]
+                          + [(0, 0)] * (c.ndim - 3))
+        if c.ndim >= 3 and c.shape[2] == s - 1 else c, cache)
+    step, _, _ = apply_model(params, tok[:, s - 1:], cfg, mode="decode",
+                             cache=cache, cache_index=jnp.int32(s - 1))
+    err = float(jnp.max(jnp.abs(step[:, 0] - full[:, -1])))
+    assert err < 2e-4, f"decode/train mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_masked_weights_equal_subset_gradients(arch):
+    """Algorithm-1 semantics of the masked fast path: zeroing an agent's
+    loss weights gives exactly the gradient of the surviving examples.
+
+    MoE archs: exact equality requires decoupling the agents through the
+    router — the load-balance aux loss is computed over *all* tokens and
+    capacity is contended across agents, so the test disables aux and
+    removes capacity pressure (the residual coupling is documented in
+    DESIGN.md §5; at production capacity it is a bounded perturbation of
+    the same order as MoE's usual token-dropping noise)."""
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    rng = jax.random.PRNGKey(3)
+    params = init_model(rng, cfg, max_pos=64)
+    tok, enc = _data(cfg, rng, b=4, s=8)
+
+    def loss(p, t, w):
+        lg, aux, _ = apply_model(p, t, cfg, mode="train", enc_embed=enc2)
+        from repro.models.model import lm_loss
+        return lm_loss(lg, t, w, aux, aux_coef=0.0)
+
+    enc2 = enc
+    w_mask = jnp.concatenate([jnp.zeros((2, 8)), jnp.ones((2, 8))])
+    g_masked = jax.grad(loss)(params, tok, w_mask)
+    enc2 = enc[2:] if enc is not None else None
+    g_subset = jax.grad(loss)(params, tok[2:], jnp.ones((2, 8)))
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        g_masked, g_subset)
+    assert max(jax.tree.leaves(diffs)) < 2e-5

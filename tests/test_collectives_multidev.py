@@ -1,0 +1,23 @@
+"""Runs the 8-virtual-device integration checks in a subprocess (the
+device count must be set before jax initializes, so it cannot run in the
+main pytest process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(540)
+def test_multidev_collectives_and_steps():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "helpers",
+                                      "multidev_checks.py")],
+        capture_output=True, text=True, env=env, timeout=520)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, "multidev checks failed"
+    assert "ALL OK" in proc.stdout

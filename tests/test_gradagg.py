@@ -1,0 +1,89 @@
+"""Property tests (hypothesis) for the gradient-aggregation rules."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gradagg
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+arrays = st.integers(3, 8).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.lists(st.floats(-10, 10), min_size=4, max_size=4),
+                 min_size=n, max_size=n),
+        st.lists(st.booleans(), min_size=n, max_size=n)))
+
+
+@given(arrays)
+def test_agg_sum_matches_manual(data):
+    n, g, rx = data
+    g = np.array(g)
+    rx = np.array(rx)
+    out = np.asarray(gradagg.agg_sum(jnp.asarray(g), jnp.asarray(rx)))
+    np.testing.assert_allclose(out, g[rx].sum(0) if rx.any() else 0 * g[0],
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(arrays, st.integers(0, 2))
+def test_cge_selects_smallest_norms(data, f):
+    n, g, rx = data
+    g = np.array(g)
+    rx = np.array(rx)
+    m = int(rx.sum())
+    if m - f <= 0:
+        return
+    keep = np.asarray(gradagg.cge_mask(jnp.asarray(g, jnp.float32),
+                                       jnp.asarray(rx), f))
+    # keep only received; exactly m-f kept; kept norms <= dropped norms
+    assert not (keep & ~rx).any()
+    assert keep.sum() == m - f
+    norms = np.linalg.norm(g, axis=1)
+    if (rx & ~keep).any() and keep.any():
+        assert norms[keep].max() <= norms[rx & ~keep].min() + 1e-6
+
+
+@given(arrays, st.integers(0, 1))
+def test_trimmed_mean_bounds(data, f):
+    """Output of coordinate-wise trimmed mean lies within the received
+    values' coordinate-wise range."""
+    n, g, rx = data
+    g = np.array(g)
+    rx = np.array(rx)
+    m = int(rx.sum())
+    if m - 2 * f <= 0:
+        return
+    out = np.asarray(gradagg.agg_trimmed_mean(
+        jnp.asarray(g, jnp.float32), jnp.asarray(rx), f))
+    lo, hi = g[rx].min(0), g[rx].max(0)
+    assert (out >= lo - 1e-4).all() and (out <= hi + 1e-4).all()
+
+
+@given(st.lists(st.floats(-100, 100), min_size=2, max_size=6),
+       st.floats(0.1, 10))
+def test_projection_is_contraction(vals, gamma):
+    x = np.array(vals)
+    p = np.asarray(gradagg.project_ball(jnp.asarray(x), gamma))
+    assert np.linalg.norm(p) <= gamma + 1e-4
+    if np.linalg.norm(x) <= gamma:
+        np.testing.assert_allclose(p, x, rtol=1e-5, atol=1e-6)
+
+
+@given(arrays)
+def test_permutation_equivariance(data):
+    """Relabeling agents permutes nothing in the aggregate (CGE & sum)."""
+    n, g, rx = data
+    g = np.array(g, np.float32)
+    rx = np.array(rx)
+    norms = np.linalg.norm(g, axis=1)
+    if int(rx.sum()) - 1 <= 0:
+        return
+    gaps = np.abs(norms[:, None] - norms[None, :])[~np.eye(n, dtype=bool)]
+    if gaps.min() < 1e-4:
+        return  # norm ties are broken arbitrarily (paper's convention)
+    perm = np.random.RandomState(0).permutation(n)
+    a1 = np.asarray(gradagg.agg_cge(jnp.asarray(g), jnp.asarray(rx), 1))
+    a2 = np.asarray(gradagg.agg_cge(jnp.asarray(g[perm]),
+                                    jnp.asarray(rx[perm]), 1))
+    np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-4)

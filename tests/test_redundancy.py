@@ -1,0 +1,59 @@
+"""Redundancy certification: definitions hold on the constructions;
+hypothesis property checks for the quadratic family."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.redundancy import (QuadraticCosts, certify_f_r_eps,
+                                   certify_r_eps, make_redundant_quadratics,
+                                   make_shared_data_costs)
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_zero_spread_gives_exact_redundancy():
+    costs = make_redundant_quadratics(8, 4, spread=0.0, seed=0)
+    for r in (1, 2, 3):
+        assert certify_r_eps(costs, r, samples=300) < 1e-8
+
+
+def test_eps_monotone_in_r():
+    costs = make_redundant_quadratics(8, 4, spread=0.05, seed=1)
+    eps = [certify_r_eps(costs, r, samples=800) for r in (1, 2, 3)]
+    assert eps[0] <= eps[1] + 1e-12 <= eps[2] + 2e-12
+
+
+def test_overlap_reduces_eps():
+    e = []
+    for overlap in (1, 4):
+        costs = make_shared_data_costs(8, 4, n_data=400, overlap=overlap,
+                                       noise=0.05, seed=2)
+        e.append(certify_r_eps(costs, 2, samples=500))
+    assert e[1] < e[0]
+
+
+def test_f_r_eps_generalizes():
+    """(f=0, r; eps) reduces to (r, eps) order of magnitude (Def 3 vs 1)."""
+    costs = make_redundant_quadratics(8, 4, spread=0.03, seed=3)
+    e_fr = certify_f_r_eps(costs, 0, 2, samples=600)
+    e_r = certify_r_eps(costs, 2, samples=600)
+    assert e_fr <= 2 * e_r + 1e-9
+
+
+@given(st.integers(0, 50))
+def test_subset_minimizer_definition(seed):
+    """x_S solves sum_{i in S} grad Q_i(x) = 0 for random subsets."""
+    rng = np.random.default_rng(seed)
+    costs = make_redundant_quadratics(6, 3, spread=0.1, seed=seed)
+    k = int(rng.integers(2, 7))
+    s = tuple(rng.choice(6, size=k, replace=False))
+    xs = costs.subset_min(s)
+    g = sum(costs.grad(i, xs) for i in s)
+    assert np.linalg.norm(g) < 1e-6
+
+
+@given(st.integers(0, 30))
+def test_mu_gamma_ordering(seed):
+    """Assumptions 1+2 jointly imply gamma <= mu (paper eq. 110)."""
+    costs = make_redundant_quadratics(6, 3, spread=0.1, cond=3.0, seed=seed)
+    assert costs.gamma(2, samples=50) <= costs.mu() + 1e-9
