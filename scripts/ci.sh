@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entrypoint. pyproject.toml sets pythonpath=["src"], so no manual
+# PYTHONPATH is needed — `python -m pytest -q` works from the repo root.
+#
+# Stage 1: tier-1 — the full fast suite (everything but the multi-device
+#          subprocess tests), fail-fast.
+# Stage 2: the 8-virtual-device integration + registry parity subset.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== stage 1: tier-1 (fast suite) =="
+python -m pytest -x -q -m "not multidev"
+
+echo "== stage 2: multidev collectives + registry parity =="
+python -m pytest -q -m multidev
+
+echo "CI OK"

@@ -47,6 +47,15 @@ class LatencyModel:
             lat[j] *= self.straggler_factor
         return lat + 2 * self.comm    # broadcast + return
 
+    def sample_one(self, j: int, rng: np.random.Generator) -> float:
+        """One agent's next-iteration latency. The event-driven stale loop
+        assigns work to a single agent at a time; sampling the full
+        n-agent vector there wasted n-1 draws per assignment."""
+        lat = self.mean * rng.lognormal(0.0, self.sigma)
+        if j in self.straggler_ids:
+            lat *= self.straggler_factor
+        return float(lat + 2 * self.comm)
+
 
 def default_latency(n_agents: int, n_stragglers: int = 3,
                     factor: float = 10.0, seed: int = 0) -> LatencyModel:
@@ -65,9 +74,10 @@ class EngineConfig:
     f: int = 0                        # Byzantine tolerance of the filter
     byz_ids: Tuple[int, ...] = ()
     attack: Optional[str] = None
-    rule: str = "sum"                 # sum | mean | cge | trimmed_mean
+    rule: str = "sum"                 # any repro.dist.registry rule name
     step_size: Callable[[int], float] = lambda t: 0.01
     proj_gamma: float = 1e6           # radius of W (L2 ball)
+    wire_dtype: str = "float32"       # on-the-wire element format
     seed: int = 0
     # crash windows: (agent, t_start, t_end) in wall-clock time
     crashes: Tuple[Tuple[int, float, float], ...] = ()
@@ -104,6 +114,14 @@ class AsyncEngine:
         self.clock = 0.0
         self.hist = History()
         self.rule = gradagg.make_gradagg(cfg.rule, f=cfg.f)
+        # wire-format accounting: broadcasts go down at the wire dtype's
+        # width; uploads at the rule's payload width (int8 error-feedback
+        # sends 1 byte/param + one f32 scale per message)
+        self._down_bytes = int(np.dtype(cfg.wire_dtype).itemsize)
+        from repro.dist.registry import get_rule  # lazy: dist sits above core
+        wire = get_rule(cfg.rule).wire_bytes
+        self._up_bytes = self._down_bytes if wire is None else int(wire)
+        self._up_overhead = 0 if wire is None else 4    # the f32 scale
         # stale-mode state
         self._x_hist: Dict[int, np.ndarray] = {}
         self._ledger_ts = np.full(cfg.n_agents, -1, np.int64)
@@ -135,7 +153,9 @@ class AsyncEngine:
         self.clock += round_time
         self.hist.wall.append(self.clock)
         self.hist.staleness.append(mean_age)
-        self.hist.bytes_tx += (c.n_agents + n_rx) * self.x.size * 4
+        self.hist.bytes_tx += (
+            c.n_agents * self.x.size * self._down_bytes
+            + n_rx * (self.x.size * self._up_bytes + self._up_overhead))
         if self.loss_fn is not None:
             self.hist.loss.append(float(self.loss_fn(self.x)))
         if self.x_star is not None:
@@ -183,8 +203,8 @@ class AsyncEngine:
         for j in range(c.n_agents):
             if self._working_on[j] < 0 and self._alive(j, self.clock):
                 self._working_on[j] = t
-                self._busy_until[j] = self.clock + float(
-                    self.lat.sample(self.rng)[j])
+                self._busy_until[j] = self.clock + \
+                    self.lat.sample_one(j, self.rng)
 
         def usable() -> int:
             return int(np.sum(self._ledger_ts >= t - c.tau))
@@ -206,8 +226,8 @@ class AsyncEngine:
                 self._ledger_ts[jn] = ts
             if self._alive(jn, self.clock):
                 self._working_on[jn] = t
-                self._busy_until[jn] = self.clock + float(
-                    self.lat.sample(self.rng)[jn])
+                self._busy_until[jn] = self.clock + \
+                    self.lat.sample_one(jn, self.rng)
             else:
                 self._working_on[jn] = -1
             guard += 1

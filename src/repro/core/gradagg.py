@@ -11,10 +11,16 @@ Rules
 - ``agg_cge``           CGE gradient filter (paper eq. (213)): sum of the
                         m - f smallest-norm received gradients.
 - ``agg_trimmed_mean``  coordinate-wise trimmed mean (Yin et al. [55]).
+- ``agg_quantized``     int8 symmetric per-agent quantization + sum (the
+                        stateless reference of the error-feedback collective
+                        in ``repro.dist.collectives.quantized_psum``).
+
+Each rule is registered as an ``AggregationRule`` strategy object in
+``repro.dist.registry`` together with its shard_map-side SPMD twin;
+``make_gradagg`` resolves through that registry (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -32,17 +38,25 @@ def agg_mean(g: jnp.ndarray, received: jnp.ndarray) -> jnp.ndarray:
     return s / jnp.maximum(jnp.sum(received.astype(g.dtype)), 1.0)
 
 
-def cge_mask(g: jnp.ndarray, received: jnp.ndarray, f: int) -> jnp.ndarray:
-    """Boolean mask selecting the m-f smallest-norm received gradients,
-    where m = |received|. Non-received agents are never selected."""
-    n = g.shape[0]
-    norms = jnp.linalg.norm(g.astype(jnp.float32), axis=1)
+def cge_mask_from_norms(norms: jnp.ndarray, received: jnp.ndarray,
+                        f: int) -> jnp.ndarray:
+    """CGE keep-set from precomputed per-agent gradient norms (n,). Shared
+    by the reference rule below and the SPMD collective (which all-reduces
+    one scalar norm per agent instead of gathering gradients)."""
+    n = norms.shape[0]
     norms = jnp.where(received, norms, BIG)
     order = jnp.argsort(norms)                       # received first, by norm
     m = jnp.sum(received.astype(jnp.int32))
     keep_k = m - f                                   # smallest m-f norms
     rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n))
     return (rank < keep_k) & received
+
+
+def cge_mask(g: jnp.ndarray, received: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Boolean mask selecting the m-f smallest-norm received gradients,
+    where m = |received|. Non-received agents are never selected."""
+    norms = jnp.linalg.norm(g.astype(jnp.float32), axis=1)
+    return cge_mask_from_norms(norms, received, f)
 
 
 def agg_cge(g: jnp.ndarray, received: jnp.ndarray, f: int) -> jnp.ndarray:
@@ -66,16 +80,34 @@ def agg_trimmed_mean(g: jnp.ndarray, received: jnp.ndarray,
     return total / cnt.astype(g.dtype)
 
 
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric int8 quantization with one scale per leading row.
+
+    x: (n, d) float32. Returns (dequantized, residual); residual is the
+    error-feedback term carried across steps by the SPMD collective.
+    The exact same math runs in ``repro.dist.collectives.quantized_psum``
+    so reference/SPMD parity is bit-identical.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    deq = q * scale
+    return deq, x - deq
+
+
+def agg_quantized(g: jnp.ndarray, received: jnp.ndarray) -> jnp.ndarray:
+    """Stateless reference of the int8 error-feedback collective: quantize
+    each agent's (whole) gradient with a per-agent scale, sum over S^t."""
+    deq, _ = quantize_int8(g.astype(jnp.float32))
+    return agg_sum(deq, received).astype(g.dtype)
+
+
 def make_gradagg(rule: str, f: int = 0) -> Callable:
-    if rule == "sum":
-        return agg_sum
-    if rule == "mean":
-        return agg_mean
-    if rule == "cge":
-        return functools.partial(agg_cge, f=f)
-    if rule == "trimmed_mean":
-        return functools.partial(agg_trimmed_mean, f=f)
-    raise ValueError(rule)
+    """Resolve a rule name to its reference callable ``(g, received) ->
+    (d,)`` via the unified ``repro.dist.registry`` (lazy import: the dist
+    layer depends on this module)."""
+    from repro.dist.registry import get_rule
+    return get_rule(rule).bind_reference(f)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,10 @@ class AsyncDGDServer:
             "ledger_g": e._ledger_g.copy(),
             "busy_until": e._busy_until.copy(),
             "working_on": e._working_on.copy(),
+            # iterate history: in-flight agents reference x^{t'} by
+            # timestamp; without it a restored run would skip their
+            # deliveries and diverge from the uninterrupted one
+            "x_hist": {k: v.copy() for k, v in e._x_hist.items()},
             "rng_state": e.rng.bit_generator.state,
         }
 
@@ -50,6 +54,7 @@ class AsyncDGDServer:
         e._ledger_g = snap["ledger_g"].copy()
         e._busy_until = snap["busy_until"].copy()
         e._working_on = snap["working_on"].copy()
+        e._x_hist = {k: v.copy() for k, v in snap.get("x_hist", {}).items()}
         e.rng.bit_generator.state = snap["rng_state"]
         self.engine = e
 

@@ -1,0 +1,74 @@
+"""jax version portability for the dist layer.
+
+The repo's SPMD code is written against the modern spellings
+(``jax.set_mesh`` as the mesh context, ``jax.shard_map`` with
+``axis_names=``/``check_vma=``). The container pins jax 0.4.37, where
+
+- ``jax.set_mesh`` does not exist (the ``Mesh`` object itself is the
+  context manager),
+- ``shard_map`` lives in ``jax.experimental.shard_map`` with
+  ``check_rep=``/``auto=`` instead, and
+- partial-auto shard_map (non-empty ``auto``) miscompiles collectives on
+  the XLA bundled here (``axis_index`` lowers to an unsupported
+  PartitionId op; ``all_gather`` trips a partitioner check-failure).
+
+So on 0.4.37 the shim lowers every shard_map to *full-manual* mode over
+all mesh axes. Axes absent from every in/out spec are then simply
+replicated — the body never issues collectives over them, so the result
+is identical; the model-parallel matmuls inside the general path run
+replicated over "model" instead of GSPMD-sharded (a perf, not semantics,
+difference; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Set
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for pjit/with_sharding_constraint
+    axis-name resolution. Usage: ``with set_mesh(mesh): ...``"""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if mesh is None:
+        return contextlib.nullcontext()
+    return mesh                        # 0.4.x: Mesh is the context manager
+
+
+def _ambient_mesh():
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    if m.empty:
+        raise ValueError(
+            "shard_map without mesh= needs an active mesh context "
+            "(wrap the call in `with set_mesh(mesh):`)")
+    return m
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False):
+    """Portable shard_map. ``axis_names`` is the set of *manual* axes the
+    body issues collectives over (the rest stay auto where supported).
+    ``mesh=None`` resolves the ambient ``set_mesh`` context at call time."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # 0.4.37: full-manual everywhere (see module docstring); unreferenced
+    # axes are replicated, which the bodies in this repo rely on.
+    def mapped(*args):
+        m = mesh if mesh is not None else _ambient_mesh()
+        return _shard_map(f, mesh=m, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False,
+                          auto=frozenset())(*args)
+
+    return mapped

@@ -1,0 +1,158 @@
+"""Unified aggregation-rule registry (the dispatch tentpole).
+
+One ``AggregationRule`` strategy object per rule, bundling
+
+- ``reference``   the jittable numpy/jnp form from ``repro.core.gradagg``
+                  operating on a stacked ``(n, d)`` gradient matrix plus a
+                  boolean ``received`` mask (the reference engine's view),
+- ``collective``  the raw shard_map-side twin from
+                  ``repro.dist.collectives`` (native signature — e.g.
+                  ``cge_psum`` also returns its keep-set),
+- ``spmd``        a uniform wrapper ``(tree, mask_self, f, axes) -> tree``
+                  with exactly the reference semantics, used by the
+                  reference/SPMD parity suite,
+- ``wire_bytes``  upload payload width per parameter (None -> the wire
+                  dtype's width; 1 for the int8 compressed rule), which
+                  the async engine's ``History.bytes_tx`` accounting uses.
+
+``EngineConfig.rule`` (via ``gradagg.make_gradagg``) and
+``TrainConfig.mode`` (via ``resolve_mode`` in the SPMD step factories)
+both resolve through this table — there is no second string-matched
+rule dispatch anywhere in the repo (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradagg
+from repro.dist import collectives as C
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationRule:
+    name: str
+    reference: Callable                  # (g, received[, f]) -> (d,)
+    collective: Callable                 # native shard_map-side twin
+    spmd: Callable                       # (tree, mask_self, f, axes) -> tree
+    needs_f: bool = False
+    normalized: bool = False             # True if output is already a mean
+    wire_bytes: Optional[int] = None     # upload bytes/param (None = dtype)
+    doc: str = ""
+
+    def bind_reference(self, f: int = 0) -> Callable:
+        """Reference callable with the Byzantine tolerance bound."""
+        if self.needs_f:
+            return partial(self.reference, f=f)
+        return self.reference
+
+
+# ---------------------------------------------------------------------------
+# uniform SPMD wrappers (parity-suite semantics == reference semantics)
+
+
+def _spmd_sum(tree, mask, f, axes):
+    del f
+    return C.masked_psum(tree, mask, axes)
+
+
+def _spmd_mean(tree, mask, f, axes):
+    del f
+    agg = C.masked_psum(tree, mask, axes)
+    denom = jnp.maximum(C.psum_all(mask, axes), 1.0)
+    return jax.tree.map(lambda g: g / denom, agg)
+
+
+def _spmd_cge(tree, mask, f, axes):
+    return C.cge_psum(tree, mask > 0, f, axes)[0]
+
+
+def _spmd_trimmed(tree, mask, f, axes):
+    return C.trimmed_mean_all(tree, mask > 0, f, axes)
+
+
+def _spmd_quantized(tree, mask, f, axes):
+    del f
+    zeros = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+    return C.quantized_psum(tree, mask, zeros, axes)[0]
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+_REGISTRY: Dict[str, AggregationRule] = {}
+
+
+def register_rule(rule: AggregationRule) -> AggregationRule:
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> AggregationRule:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation rule {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def rule_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_rule(AggregationRule(
+    name="sum", reference=gradagg.agg_sum,
+    collective=C.masked_psum, spmd=_spmd_sum,
+    doc="Algorithm 1 eq. (3): sum over S^t (one bulk psum)."))
+
+register_rule(AggregationRule(
+    name="mean", reference=gradagg.agg_mean,
+    collective=C.masked_psum, spmd=_spmd_mean, normalized=True,
+    doc="sum / |S^t| — the LR-rescaled D-SGD variant."))
+
+register_rule(AggregationRule(
+    name="cge", reference=gradagg.agg_cge,
+    collective=C.cge_psum, spmd=_spmd_cge, needs_f=True,
+    doc="CGE filter eq. (18): sum of the m-f smallest-norm gradients "
+        "(norms all-reduce + masked psum)."))
+
+register_rule(AggregationRule(
+    name="trimmed_mean", reference=gradagg.agg_trimmed_mean,
+    collective=C.trimmed_mean_all, spmd=_spmd_trimmed, needs_f=True,
+    normalized=True,
+    doc="Coordinate-wise trimmed mean (Yin et al.): full stack gather."))
+
+register_rule(AggregationRule(
+    name="quantized", reference=gradagg.agg_quantized,
+    collective=C.quantized_psum, spmd=_spmd_quantized, wire_bytes=1,
+    doc="int8 error-feedback compressed sum (1 byte/param uploads)."))
+
+
+# ---------------------------------------------------------------------------
+# TrainConfig.mode -> rule resolution (SPMD step factories)
+
+_MODE_RULES = {
+    "masked": "sum",      # Algorithm 1 via loss-weight masking (fast path)
+    "sync": "sum",
+    "cge": "cge",
+    "stale": "sum",       # rule (15): ledger substitution, then masked sum
+    "trimmed": "trimmed_mean",
+    "quantized": "quantized",
+}
+
+
+def resolve_mode(mode: str) -> AggregationRule:
+    try:
+        return get_rule(_MODE_RULES[mode])
+    except KeyError:
+        raise ValueError(
+            f"unknown train mode {mode!r}; known: {sorted(_MODE_RULES)}"
+        ) from None

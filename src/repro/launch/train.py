@@ -31,6 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist import collectives as C
+from repro.dist.compat import shard_map
+from repro.dist.registry import resolve_mode
 from repro.dist.sharding import MeshRules, tree_specs, batch_specs
 from repro.launch.mesh import dp_axis_names, n_agents_of
 from repro.launch.specs import max_pos_for
@@ -143,6 +145,7 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, moe_groups: int = 1,
                     dp=None, tp=None, param_specs=None, sizes=None) -> Callable:
     """Algorithm 1 / synchronous step. batch["weights"] carries the agent
     mask (zeros for dropped stragglers). Pure pjit; FSDP-compatible."""
+    resolve_mode(tc.mode)               # fail fast on unknown modes
     opt = make_optimizer(tc)
     loss_fn = make_loss_fn(cfg, tc, moe_groups, dp=dp, tp=tp,
                            param_specs=param_specs, sizes=sizes)
@@ -208,6 +211,7 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
     opt = make_optimizer(tc)
     dp = dp_axis_names(mesh)
     n = n_agents_of(mesh)
+    rule = resolve_mode(tc.mode)        # single dispatch point (registry)
     # NOTE: activation pins inside the partial-manual region trigger an
     # XLA partitioner check-failure at 256+ devices (both Shardy and legacy
     # GSPMD); the general path therefore runs without them and relies on
@@ -220,13 +224,13 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
         loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
 
         if tc.mode == "cge":
-            agg, keep = C.cge_psum(grads, mask_self > 0, tc.f, dp)
+            agg, keep = rule.collective(grads, mask_self > 0, tc.f, dp)
             denom = jnp.sum(keep.astype(jnp.float32))
-            loss = jax.lax.psum(loss * mask_self, dp[0]) if len(dp) == 1 \
-                else jax.lax.psum(jax.lax.psum(loss * mask_self, dp[0]), dp[1])
+            loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "trimmed":
-            agg = C.trimmed_mean_all(grads, mask_self > 0, tc.f, dp)
-            denom = jnp.asarray(1.0)       # rule returns a mean already
+            agg = rule.collective(grads, mask_self > 0, tc.f, dp)
+            denom = (jnp.asarray(1.0) if rule.normalized
+                     else _psum_all(mask_self, dp))
             loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "stale":
             ledger_self = jax.tree.map(lambda l: l[0], state["ledger"]["g"])
@@ -237,7 +241,7 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
             contrib = jax.tree.map(
                 lambda g, l: jnp.where(fresh, g.astype(jnp.float32), l),
                 grads, ledger_self)
-            agg = C.masked_psum(contrib, usable.astype(jnp.float32), dp)
+            agg = rule.collective(contrib, usable.astype(jnp.float32), dp)
             denom = _psum_all(usable.astype(jnp.float32), dp)
             new_ledger = {
                 "g": jax.tree.map(lambda c: c[None], contrib),
@@ -245,7 +249,7 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
             loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "quantized":
             err_self = jax.tree.map(lambda l: l[0], state["err"])
-            agg, new_err = C.quantized_psum(grads, mask_self, err_self, dp)
+            agg, new_err = rule.collective(grads, mask_self, err_self, dp)
             denom = _psum_all(mask_self, dp)
             loss = _psum_all(loss * mask_self, dp)
         else:
@@ -296,7 +300,7 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
     def step(state, batch, fresh_mask):
         st_specs, bt_specs, fm_spec = in_specs_of(state, batch, fresh_mask)
         out_state_specs = jax.tree.map(lambda s: s, st_specs)
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(local),
             mesh=mesh,
             in_specs=(st_specs, bt_specs, fm_spec),

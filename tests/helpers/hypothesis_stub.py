@@ -1,0 +1,137 @@
+"""Minimal in-tree stand-in for the ``hypothesis`` package.
+
+The container does not ship hypothesis and installing packages is not an
+option, so ``tests/conftest.py`` registers this module as ``hypothesis``
+when the real one is absent. It implements exactly the surface the test
+suite uses — ``given``, ``settings`` profiles, and the ``strategies``
+combinators below — with deterministic pseudo-random example generation
+(seeded per test name) instead of hypothesis' guided search + shrinking.
+Property coverage is therefore Monte-Carlo rather than adversarial;
+install real hypothesis to get shrinking back, nothing else changes.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng: random.Random):
+        return self._draw(rng)
+
+    def flatmap(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)).sample(rng))
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, tries: int = 100) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    def draw(rng):
+        # bias toward the interesting boundary cases hypothesis would find
+        r = rng.random()
+        if r < 0.05:
+            return min_value
+        if r < 0.10:
+            return max_value
+        if r < 0.15 and min_value <= 0.0 <= max_value:
+            return 0.0
+        return rng.uniform(min_value, max_value)
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.sample(rng)
+                                            for s in strategies))
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+class settings:
+    _profiles = {"default": {"max_examples": 100, "deadline": None}}
+    _current = dict(_profiles["default"])
+
+    def __init__(self, **kw):
+        self._kw = kw
+
+    def __call__(self, fn):          # used as a decorator: pass-through
+        fn._stub_settings = self._kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kw) -> None:
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = dict(cls._profiles["default"])
+        cls._current.update(cls._profiles.get(name, {}))
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._current.get("max_examples", 100))
+
+
+def given(*strategies: SearchStrategy):
+    def decorate(fn):
+        n = getattr(fn, "_stub_settings", {}).get(
+            "max_examples", None)
+
+        def wrapper():
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            count = n or settings.max_examples()
+            for _ in range(count):
+                fn(*[s.sample(rng) for s in strategies])
+
+        # NOTE: no functools.wraps — pytest follows __wrapped__ when
+        # inspecting signatures and would demand fixtures for the
+        # strategy-filled parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return decorate
+
+
+# expose a ``hypothesis.strategies`` submodule mirror
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "just", "lists", "tuples",
+              "sampled_from", "SearchStrategy"):
+    setattr(strategies, _name, getattr(sys.modules[__name__], _name))

@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import gradagg                 # noqa: E402
 from repro.dist import collectives as C        # noqa: E402
+from repro.dist.compat import set_mesh, shard_map  # noqa: E402
 from repro.launch.mesh import make_test_mesh   # noqa: E402
 
 
@@ -37,8 +38,8 @@ def main():
         me = C.agent_index(("data",))
         return C.masked_psum({"g": gl[0]}, m[me], ("data",))["g"]
 
-    with jax.set_mesh(mesh):
-        out = jax.jit(jax.shard_map(
+    with set_mesh(mesh):
+        out = jax.jit(shard_map(
             f, in_specs=(P("data"), P()), out_specs=P(),
             axis_names={"data"}, check_vma=False))(g_all, mask)
     ref = gradagg.agg_sum(g_all, mask > 0)
@@ -52,8 +53,8 @@ def main():
         agg, keep = C.cge_psum({"g": gl[0]}, m[me] > 0, f_byz, ("data",))
         return agg["g"], keep
 
-    with jax.set_mesh(mesh):
-        out, keep = jax.jit(jax.shard_map(
+    with set_mesh(mesh):
+        out, keep = jax.jit(shard_map(
             fc, in_specs=(P("data"), P()), out_specs=(P(), P()),
             axis_names={"data"}, check_vma=False))(g_all, mask)
     ref = gradagg.agg_cge(g_all, mask > 0, f_byz)
@@ -70,8 +71,8 @@ def main():
         return agg["g"], err["g"][None]
 
     err0 = jnp.zeros((n, dim))
-    with jax.set_mesh(mesh):
-        out, err = jax.jit(jax.shard_map(
+    with set_mesh(mesh):
+        out, err = jax.jit(shard_map(
             fq, in_specs=(P("data"), P(), P("data")),
             out_specs=(P(), P("data")),
             axis_names={"data"}, check_vma=False))(g_all, mask, err0)
@@ -97,7 +98,7 @@ def main():
                  "weights": jnp.ones(tok.shape, jnp.float32)}
         fresh = jnp.asarray([1.0, 1.0, 0.0, 1.0])
         step = make_general_step(cfg, tc, mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             new_state, metrics = jax.jit(step)(state, batch, fresh)
         ok = bool(jnp.isfinite(metrics["loss"])) and \
             int(new_state["step"]) == 1
@@ -122,7 +123,7 @@ def main():
                            sizes={"data": 4, "model": 2})
     mk = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                 is_leaf=lambda x: isinstance(x, P))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jf = jax.jit(step, in_shardings=(mk(st_specs), mk(bt_specs)))
         new_state, metrics = jf(state, batch)
     check(f"masked_pjit loss={float(metrics['loss']):.3f}",
@@ -131,7 +132,7 @@ def main():
     # --- masked == subset-gradient equivalence under pjit --------------
     w0 = jnp.ones(tok.shape, jnp.float32).at[:4].set(0.0)
     batch0 = dict(batch, weights=w0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         s1, m1 = jf(state, batch0)
     # reference: unsharded masked step
     step_ref = make_train_step(cfg, tc)

@@ -1,6 +1,6 @@
-"""Runs the 8-virtual-device integration checks in a subprocess (the
-device count must be set before jax initializes, so it cannot run in the
-main pytest process)."""
+"""Reference/SPMD parity for every registered aggregation rule, run in a
+subprocess with 8 virtual devices (the device count must be set before
+jax initializes, so it cannot run in the main pytest process)."""
 import os
 import subprocess
 import sys
@@ -10,15 +10,15 @@ import pytest
 
 @pytest.mark.multidev
 @pytest.mark.timeout(540)
-def test_multidev_collectives_and_steps():
+def test_registry_rules_reference_spmd_parity():
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
     proc = subprocess.run(
         [sys.executable, os.path.join(root, "tests", "helpers",
-                                      "multidev_checks.py")],
+                                      "parity_checks.py")],
         capture_output=True, text=True, env=env, timeout=520)
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr[-2000:])
-    assert proc.returncode == 0, "multidev checks failed"
+    assert proc.returncode == 0, "parity checks failed"
     assert "ALL OK" in proc.stdout
