@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   byzantine            §4 / Theorems 5-6 (attack x rule grid)
   redundancy_tradeoff  Definition 1 (overlap -> eps -> error)
   roofline             §Roofline terms from the dry-run artifacts
+  serve_latency        first-(n-r) dispatch p99 vs r + paged-engine tok/s
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: comm_time,staleness,byzantine,"
-                         "redundancy,roofline")
+                         "redundancy,roofline,serve")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     args = ap.parse_args()
@@ -51,6 +52,10 @@ def main() -> None:
     from benchmarks import comm_time
     go("comm_time", (lambda: comm_time.run(iters=30)) if args.fast
        else comm_time.main)
+
+    from benchmarks import serve_latency
+    go("serve", (lambda: serve_latency.main(200, 3)) if args.fast
+       else serve_latency.main)
 
 
 if __name__ == "__main__":

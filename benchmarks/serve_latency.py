@@ -1,0 +1,102 @@
+"""Serving tail latency vs redundancy r (DESIGN.md §9).
+
+Two measurements:
+
+1. ``serve/dispatch_r{r}`` — the paper's first-(n-r) waiting rule applied
+   to replicated inference, simulated with the §5 heavy-tail LatencyModel
+   (3 stragglers x10): p50/p99 round latency vs the wait-for-all baseline
+   and whether the answered tokens match it (they must — honest replicas
+   are deterministic copies).
+2. ``serve/engine`` — real tokens/s of the paged continuous-batching
+   engine on a reduced registry arch (CPU-scale smoke of the actual
+   decode path).
+
+    PYTHONPATH=src python benchmarks/serve_latency.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.async_engine import default_latency
+from repro.serve.dispatch import (DispatchConfig, RedundantDispatcher,
+                                  tail_latency)
+
+N_REPLICAS = 10
+
+
+def _replica_fn(j, request):
+    rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
+    return rng.integers(0, 256, 16).astype(np.int32)
+
+
+def run_dispatch(n_requests: int = 2000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = [rng.integers(0, 256, 8).astype(np.int32)
+            for _ in range(n_requests)]
+    rows = []
+    for r in (0, 1, 2, 3):
+        lat = default_latency(N_REPLICAS, n_stragglers=3, factor=10.0,
+                              seed=3)
+        d = RedundantDispatcher(
+            _replica_fn, DispatchConfig(n_replicas=N_REPLICAS, r=r),
+            latency=lat)
+        t0 = time.time()
+        toks, lats = d.serve(reqs)
+        wall = time.time() - t0
+        d.reseed()
+        toks_all, lats_all = d.serve(reqs, wait_for_all=True)
+        match = all(np.array_equal(a, b) for a, b in zip(toks, toks_all))
+        rows.append(dict(
+            r=r, p50=tail_latency(lats, 50), p99=tail_latency(lats, 99),
+            p99_all=tail_latency(lats_all, 99), match=match, wall_s=wall))
+    return rows
+
+
+def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b"):
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.model import init_model
+    from repro.serve import PagedCacheConfig, ServeEngine
+
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(seed), cfg, max_pos=128)
+    rng = np.random.default_rng(seed)
+    engine = ServeEngine(params, cfg, PagedCacheConfig(
+        num_slots=2, page_size=8, num_pages=17, max_pages_per_seq=4))
+    total = 0
+    for _ in range(n_requests):
+        s0 = int(rng.integers(4, 17))
+        new = int(rng.integers(4, 13))
+        total += new
+        engine.submit(rng.integers(0, cfg.vocab_size, s0).astype(np.int32),
+                      new)
+    t0 = time.time()
+    engine.run()
+    wall = time.time() - t0
+    return dict(arch=arch, tokens=total, wall_s=wall,
+                tok_s=total / max(wall, 1e-9), stats=engine.stats)
+
+
+def main(n_requests: int = 2000, engine_requests: int = 8):
+    for row in run_dispatch(n_requests):
+        print(f"serve/dispatch_r{row['r']},{row['wall_s'] * 1e6:.0f},"
+              f"p50={row['p50']:.3f};p99={row['p99']:.3f};"
+              f"p99_all={row['p99_all']:.3f};match={int(row['match'])}")
+    row = run_engine(engine_requests)
+    print(f"serve/engine_{row['arch']},{row['wall_s'] * 1e6:.0f},"
+          f"tok_s={row['tok_s']:.1f};decodes={row['stats']['decode_steps']};"
+          f"prefills={row['stats']['prefill_calls']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    args = ap.parse_args()
+    if args.smoke:
+        main(n_requests=200, engine_requests=3)
+    else:
+        main()

@@ -5,6 +5,11 @@
 # Stage 1: tier-1 — the full fast suite (everything but the multi-device
 #          subprocess tests), fail-fast.
 # Stage 2: the 8-virtual-device integration + registry parity subset.
+# Stage 3: interpret-mode kernel job — the Pallas kernels against their
+#          jnp oracles with the backend pinned to CPU (catches kernels
+#          that only pass because auto-dispatch routed to the reference).
+# Stage 4: serving smoke — the tail-latency benchmark end to end, so the
+#          dispatch/engine benchmark path cannot rot.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,5 +18,12 @@ python -m pytest -x -q -m "not multidev"
 
 echo "== stage 2: multidev collectives + registry parity =="
 python -m pytest -q -m multidev
+
+echo "== stage 3: interpret-mode kernels (JAX_PLATFORMS=cpu) =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_flash.py \
+    tests/test_kernels_cge.py tests/test_kernels_decode.py
+
+echo "== stage 4: serving latency benchmark (smoke) =="
+python benchmarks/serve_latency.py --smoke
 
 echo "CI OK"

@@ -147,14 +147,18 @@ class AsyncEngine:
             np.asarray(self.x - eta * agg), self.cfg.proj_gamma)
 
     def _record(self, round_time: float, mean_age: float = 0.0,
-                n_rx: int = 0) -> None:
+                n_rx: int = 0, n_bcast: Optional[int] = None) -> None:
         c = self.cfg
         self.hist.comm_time.append(round_time)
         self.clock += round_time
         self.hist.wall.append(self.clock)
         self.hist.staleness.append(mean_age)
+        # broadcasts are billed per *recipient*: fresh mode passes the
+        # alive count, so crashed agents stop inflating bytes_tx
+        if n_bcast is None:
+            n_bcast = c.n_agents
         self.hist.bytes_tx += (
-            c.n_agents * self.x.size * self._down_bytes
+            n_bcast * self.x.size * self._down_bytes
             + n_rx * (self.x.size * self._up_bytes + self._up_overhead))
         if self.loss_fn is not None:
             self.hist.loss.append(float(self.loss_fn(self.x)))
@@ -186,7 +190,7 @@ class AsyncEngine:
         agg = self.rule(np.asarray(g, np.float64), received)
         self._apply(np.asarray(agg), c.step_size(self.t))
         self.t += 1
-        self._record(round_time, 0.0, wait_for)
+        self._record(round_time, 0.0, wait_for, n_bcast=n_alive)
 
     # ------------------------------------------------------------------
     def step_stale(self) -> None:

@@ -16,6 +16,12 @@ from repro.core.async_engine import (AsyncEngine, EngineConfig, History,
                                      LatencyModel)
 
 
+def _copy_hist(h: History) -> History:
+    return History(loss=list(h.loss), dist=list(h.dist),
+                   comm_time=list(h.comm_time), wall=list(h.wall),
+                   bytes_tx=h.bytes_tx, staleness=list(h.staleness))
+
+
 class AsyncDGDServer:
     def __init__(self, grad_fn, x0, cfg: EngineConfig,
                  latency: Optional[LatencyModel] = None, loss_fn=None,
@@ -40,6 +46,10 @@ class AsyncDGDServer:
             # deliveries and diverge from the uninterrupted one
             "x_hist": {k: v.copy() for k, v in e._x_hist.items()},
             "rng_state": e.rng.bit_generator.state,
+            # run history: without it every restore/reconfigure would
+            # zero bytes_tx / comm_time / loss and corrupt comm-savings
+            # comparisons that span a reconfiguration
+            "hist": _copy_hist(e.hist),
         }
 
     def restore(self, snap: Dict[str, Any], cfg: EngineConfig) -> None:
@@ -56,6 +66,8 @@ class AsyncDGDServer:
         e._working_on = snap["working_on"].copy()
         e._x_hist = {k: v.copy() for k, v in snap.get("x_hist", {}).items()}
         e.rng.bit_generator.state = snap["rng_state"]
+        if "hist" in snap:              # older snapshots carry no history
+            e.hist = _copy_hist(snap["hist"])
         self.engine = e
 
     # -- elastic reconfiguration ----------------------------------------

@@ -1,0 +1,139 @@
+"""Pallas TPU flash-decode over a paged KV cache (single query per seq).
+
+The serving path stores KV in fixed-size physical pages
+(``repro.serve.kv_cache``); at decode each sequence holds a page table
+mapping logical pages to physical ones. The kernel grids over
+(B, H, Pmax) and walks each sequence's pages with the same online-softmax
+accumulation as ``flash_attention.py`` — the (T,) score row never leaves
+VMEM and no gathered/contiguous copy of the cache is ever materialized.
+
+Page indirection uses scalar prefetch (``pltpu.PrefetchScalarGridSpec``):
+the page table and lengths are prefetched to SMEM so each KV BlockSpec's
+index_map can pick the *physical* page for grid step (b, ·, p). Length
+masking handles the ragged last page; for causal self-decode the query is
+at position kv_len-1, so the length mask is exactly the causal mask
+(cross-attention decode passes the memory length instead — same mask).
+
+TPU is the target; correctness is validated on CPU via ``interpret=True``
+against ``ref.ref_paged_decode_attention`` (tests/test_kernels_decode.py).
+When the TPU helpers are unavailable (CPU-only installs) the public entry
+falls back to the oracle — same contract as ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-only helpers; the jnp fallback works without them
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
+            num_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (D,)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (PS, Dv)
+
+    s = jax.lax.dot_general(q[None], k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = pos < len_ref[b]                       # ragged last page + causal
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (1, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # explicit re-mask: on an all-masked page m_new is still NEG_INF and
+    # exp(s - m_new) would be 1, not 0 (the kv_len == 0 idle-slot case)
+    pr = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (1, PS)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(pr, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(p == num_pages - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens, *,
+                       interpret: bool = False):
+    """q: (B,H,D); k_pages: (N,PS,Hkv,D); v_pages: (N,PS,Hkv,Dv);
+    page_table: (B,Pmax) int32; kv_lens: (B,) int32. Returns (B,H,Dv).
+
+    KV heads are grouped: head h reads KV head h // (H // Hkv). Page-table
+    entries past a sequence's length may be -1 or stale; they are clamped
+    to 0 and masked, so the pool's page 0 doubles as the null page.
+    """
+    b, h, d = q.shape
+    n, ps, hkv, dv = v_pages.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    pmax = page_table.shape[1]
+    scale = d ** -0.5
+
+    if pltpu is None:  # pragma: no cover - CPU-only installs
+        from repro.kernels.ref import ref_paged_decode_attention
+        return ref_paged_decode_attention(q, k_pages, v_pages, page_table,
+                                          kv_lens)
+
+    tbl = jnp.maximum(page_table, 0).astype(jnp.int32)
+    kern = functools.partial(_kernel, scale=scale, page_size=ps,
+                             num_pages=pmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h_, p_, tbl_, l_: (b_, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, p_, tbl_, l_: (tbl_[b_, p_], 0,
+                                                       h_ // g, 0)),
+            pl.BlockSpec((1, ps, 1, dv),
+                         lambda b_, h_, p_, tbl_, l_: (tbl_[b_, p_], 0,
+                                                       h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv),
+                               lambda b_, h_, p_, tbl_, l_: (b_, h_, 0)),
+        scratch_shapes=[
+            _VMEM((1, 1), jnp.float32),
+            _VMEM((1, 1), jnp.float32),
+            _VMEM((1, dv), jnp.float32),
+        ],
+    )
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(tbl, kv_lens.astype(jnp.int32), q, k_pages, v_pages)

@@ -85,9 +85,6 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     kern = functools.partial(_kernel, causal=causal, scale=scale,
                              block_q=block_q, block_k=block_k, num_kv=nk)
 
-    if interpret or _VMEM is None:
-        scratch = [
-            pl.MemorySpace.ANY and None or None]  # placeholder, not used
     grid = (b, h, nq, nk)
     in_specs = [
         pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
@@ -96,14 +93,19 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     ]
     out_spec = pl.BlockSpec((1, 1, block_q, dv),
                             lambda b_, h_, iq, ik: (b_, h_, iq, 0))
-    if _VMEM is not None:
-        scratch_shapes = [
-            _VMEM((block_q,), jnp.float32),
-            _VMEM((block_q,), jnp.float32),
-            _VMEM((block_q, dv), jnp.float32),
-        ]
-    else:  # pragma: no cover
-        scratch_shapes = []
+    # without the TPU helpers (CPU-only installs) scratch still has to match
+    # the kernel signature (m_ref, l_ref, acc_ref); route it through the
+    # backend-agnostic ANY memory space and force interpret mode, since
+    # nothing can compile a TPU kernel there anyway
+    mem = _VMEM if _VMEM is not None else (
+        lambda shape, dt: pl.MemoryRef(shape, dt, pl.ANY))
+    if _VMEM is None:
+        interpret = True
+    scratch_shapes = [
+        mem((block_q,), jnp.float32),
+        mem((block_q,), jnp.float32),
+        mem((block_q, dv), jnp.float32),
+    ]
 
     kwargs = {}
     if pltpu is not None and not interpret:

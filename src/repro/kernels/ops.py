@@ -34,6 +34,21 @@ def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto"):
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
+                           impl: str = "auto"):
+    """Single-query attention over paged KV (serving decode hot path).
+    q: (B,H,D); k_pages/v_pages: (N,PS,Hkv,D/Dv); page_table: (B,Pmax);
+    kv_lens: (B,). Returns (B,H,Dv)."""
+    from repro.kernels import decode_attention as _da
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.ref_paged_decode_attention(q, k_pages, v_pages,
+                                               page_table, kv_lens)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _da.paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
 def block_sq_norms(x, *, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return _ref.ref_block_sq_norms(x)

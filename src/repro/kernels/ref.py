@@ -21,6 +21,45 @@ def ref_flash_attention(q, k, v, *, causal: bool = True):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens):
+    """Single-query attention over a paged KV cache (pure-jnp oracle).
+
+    q: (B, H, D) — one query token per sequence.
+    k_pages: (N, PS, Hkv, D); v_pages: (N, PS, Hkv, Dv) — the physical page
+        pool (N pages of PS tokens each), KV heads grouped (H % Hkv == 0).
+    page_table: (B, Pmax) int32 — logical page p of sequence b lives in
+        physical page page_table[b, p]; entries past the sequence may be
+        any *valid* index (they are masked by kv_lens).
+    kv_lens: (B,) int32 — valid tokens per sequence; for causal self-decode
+        the query sits at position kv_lens-1, so the length mask *is* the
+        causal mask; for cross-attention kv_lens is the memory length.
+
+    Returns (B, H, Dv) in q.dtype with an fp32 softmax.
+    """
+    b, h, d = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    ps = k_pages.shape[1]
+    tbl = jnp.maximum(page_table, 0)
+    k = k_pages[tbl]                       # (B, Pmax, PS, Hkv, D)
+    v = v_pages[tbl]
+    t = k.shape[1] * ps
+    k = k.reshape(b, t, hkv, -1)
+    v = v.reshape(b, t, hkv, -1)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s_ = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (d ** -0.5)
+    mask = jnp.arange(t)[None, :] < kv_lens[:, None]          # (B, T)
+    s_ = jnp.where(mask[:, None, :], s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    # all-masked rows (kv_len == 0) produce a uniform softmax; zero them
+    w = jnp.where(jnp.any(mask, axis=1)[:, None, None], w, 0.0)
+    return jnp.einsum("bht,bthv->bhv", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def ref_block_sq_norms(x):
     """x: (n, w) -> (n,) fp32 squared norms."""
     xf = x.astype(jnp.float32)

@@ -1,9 +1,14 @@
 """Serving steps: prefill (builds the KV/SSM cache) and decode (one token).
 
-Inference has no gradient aggregation, so the paper's technique is N/A at
-the step level (DESIGN.md §4); the serving-side straggler story is request
-re-dispatch in the async engine. These steps are what decode_32k /
-long_500k / prefill_32k dry-run and roofline.
+Inference has no gradient aggregation, but the paper's waiting rule very
+much applies to serving: a replicated deployment fans each request out to
+n model replicas and proceeds with the first n-r completions
+(``repro.serve.dispatch``, DESIGN.md §9) — Algorithm 1's S^t set with
+requests in place of gradients. The serving memory/scheduling substrate
+(paged KV/SSM cache, continuous batching) lives in ``repro.serve``;
+``greedy_generate`` below is the small driver over it that examples and
+tests use. These steps are what decode_32k / long_500k / prefill_32k
+dry-run and roofline.
 """
 from __future__ import annotations
 
@@ -54,28 +59,28 @@ def make_decode_step(cfg: ArchConfig, moe_groups: int = 1,
 
 
 def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
-                    steps: int):
-    """Tiny CPU-scale generation driver used by examples/tests."""
-    from repro.models.model import init_cache
-    b = prompt.shape[0]
-    _, _, cache = apply_model(params, prompt, cfg, mode="prefill")
-    # pad prefill cache out to max_len along the seq axis
-    s0 = prompt.shape[1]
+                    steps: int, page_size: int = 8):
+    """CPU-scale generation driver on the paged serving engine.
 
-    def pad(c):
-        if c.ndim >= 3 and c.shape[2] == s0:
-            pw = [(0, 0)] * c.ndim
-            pw[2] = (0, max_len - s0)
-            return jnp.pad(c, pw)
-        return c
-    cache = jax.tree.map(pad, cache)
-    decode = jax.jit(make_decode_step(cfg))
-    toks = [prompt]
-    logits, _, _ = apply_model(params, prompt, cfg, mode="train")
-    cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    for i in range(steps):
-        toks.append(cur)
-        cur, cache = decode(params, {"tokens": cur, "cache": cache,
-                                     "pos": jnp.int32(s0 + i)})
-        cur = cur[:, None]
-    return jnp.concatenate(toks, axis=1)
+    Returns ``prompt`` extended with exactly ``steps`` new tokens per row.
+    The first token comes from the prefill logits (the old driver redid a
+    full train-mode forward for it and dropped the final decode's token);
+    equal-length prompts admit as one group, so the whole batch costs
+    exactly one prefill plus ``steps - 1`` decode steps.
+    """
+    import numpy as np
+    from repro.serve import PagedCacheConfig, ServeEngine
+
+    b, s0 = prompt.shape
+    total = s0 + steps
+    if total > max_len:
+        raise ValueError(f"prompt {s0} + steps {steps} > max_len {max_len}")
+    per_seq = -(-total // page_size)
+    ccfg = PagedCacheConfig(num_slots=b, page_size=page_size,
+                            num_pages=b * per_seq + 1,
+                            max_pages_per_seq=per_seq)
+    engine = ServeEngine(params, cfg, ccfg)
+    rids = [engine.submit(np.asarray(prompt[i]), steps) for i in range(b)]
+    out = engine.run()
+    new = jnp.asarray(np.stack([out[rid] for rid in rids]))
+    return jnp.concatenate([prompt, new], axis=1)

@@ -130,14 +130,35 @@ def _proj_qkv(p, x, kv_x, cfg: ArchConfig):
     return q, k, v
 
 
+def _paged_append(pool, new, page_table, lens, ps):
+    """Write one token per sequence into its page pool. pool:
+    (N, PS, ...); new: (B, ...); position = lens[b] in logical pages."""
+    b = new.shape[0]
+    phys = page_table[jnp.arange(b), lens // ps]     # (B,)
+    return pool.at[phys, lens % ps].set(new.astype(pool.dtype))
+
+
+def _paged_read(pool, page_table):
+    """Gather a contiguous (B, Pmax*PS, ...) view of the paged leaf.
+    Used by MLA's absorbed decode (latent-space scores have no Pallas
+    kernel); GQA paged decode goes through kernels/ops instead."""
+    g = pool[jnp.maximum(page_table, 0)]             # (B, Pmax, PS, ...)
+    return g.reshape(g.shape[0], -1, *g.shape[3:])
+
+
 def apply_gqa(p, x, cfg: ArchConfig, *, positions=None, kv_x=None,
               cache=None, cache_index=None, causal=True,
-              return_cache=False):
+              return_cache=False, page_table=None):
     """Self- or cross-attention.
 
     - training / encoder: cache=None, full seq.
     - prefill: return_cache=True -> returns populated cache.
-    - decode: cache given + cache_index (B,) -> one-step update.
+    - decode: cache given + cache_index -> one-step update. cache_index
+      may be a scalar (legacy: all rows at one position) or a (B,) vector
+      of per-sequence lengths (serving: ragged continuous batch).
+    - paged decode: cache holds ``k_pages``/``v_pages`` pools and
+      ``page_table`` (B, Pmax) maps logical to physical pages
+      (repro.serve.kv_cache). cache_index must then be the (B,) lengths.
     """
     cross = kv_x is not None
     src = kv_x if cross else x
@@ -172,11 +193,41 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions=None, kv_x=None,
                            cfg.mrope_sections if cfg.rope == "mrope" else None)
             k_new = apply_rope(k_new, pos, cfg.rope_theta,
                                cfg.mrope_sections if cfg.rope == "mrope" else None)
-        # write at cache_index (per-batch identical index assumed)
-        idx = cache_index[0] if cache_index.ndim else cache_index
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
-        kv_len = jnp.broadcast_to(idx + 1, (b,))
+        if "k_pages" in cache:
+            # paged decode: append at (page_table[b, len//ps], len % ps),
+            # then attend page-indirectly — kernels/ops dispatches to the
+            # Pallas flash-decode kernel on TPU and to the jnp gather
+            # oracle elsewhere (DESIGN.md §6/§9). The kernel resolves the
+            # KV-head grouping itself, so no repeat here.
+            from repro.kernels.ops import paged_decode_attention
+            lens = cache_index
+            ps = cache["k_pages"].shape[1]
+            kp = _paged_append(cache["k_pages"], k_new[:, 0], page_table,
+                               lens, ps)
+            vp = _paged_append(cache["v_pages"], v_new[:, 0], page_table,
+                               lens, ps)
+            out = paged_decode_attention(q[:, 0], kp, vp, page_table,
+                                         lens + 1)[:, None]  # (B,1,H,hd)
+            y = jnp.einsum("bse,ed->bsd",
+                           out.astype(x.dtype).reshape(b, s, -1), p["wo"])
+            return y, {"k_pages": kp, "v_pages": vp}
+        if jnp.ndim(cache_index):
+            # ragged continuous batch: each row writes at its own length
+            idx = cache_index
+            k = cache["k"].at[jnp.arange(b), idx].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v = cache["v"].at[jnp.arange(b), idx].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            kv_len = idx + 1
+            new_cache = {"k": k, "v": v}
+        else:
+            idx = cache_index
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx,
+                                                    axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx,
+                                                    axis=1)
+            kv_len = jnp.broadcast_to(idx + 1, (b,))
+            new_cache = {"k": k, "v": v}
         # decode: the cache is head_dim-sharded over TP (so 32k x B caches
         # fit per device); pin q/k/v to the same layout so the score
         # contraction becomes partial-dot + a tiny (B,H,1,T) all-reduce
@@ -187,7 +238,6 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions=None, kv_x=None,
         vx = constrain(jnp.repeat(v, g, axis=2), "hd_tp") if g > 1 \
             else constrain(v, "hd_tp")
         out = plain_attention(qh, kx, vx, causal=False, kv_len=kv_len)
-        new_cache = {"k": k, "v": v}
     else:
         q, k, v = _proj_qkv(p, x, src, cfg)
         if not cross and cfg.rope in ("rope", "mrope"):
@@ -239,7 +289,7 @@ def _rms(x, scale):
 
 
 def apply_mla(p, x, cfg: ArchConfig, *, positions, cache=None,
-              cache_index=None, return_cache=False):
+              cache_index=None, return_cache=False, page_table=None):
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -256,23 +306,46 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, cache=None,
         positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None and cache_index is not None:
-        # absorbed decode: score in latent space, never materialize K/V
-        idx = cache_index[0] if cache_index.ndim else cache_index
-        ckv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv_new, idx, axis=1)
-        kr = jax.lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr_new, idx, axis=1)
+        # absorbed decode: score in latent space, never materialize K/V.
+        # The latent cache pages exactly like KV: one (rank,)/(rope,) row
+        # per token (jnp gather path; TPU kernel coverage is GQA's).
+        if "ckv_pages" in cache:
+            lens = cache_index
+            ps = cache["ckv_pages"].shape[1]
+            ckv_p = _paged_append(cache["ckv_pages"], ckv_new[:, 0],
+                                  page_table, lens, ps)
+            kr_p = _paged_append(cache["kr_pages"], kr_new[:, 0],
+                                 page_table, lens, ps)
+            ckv = _paged_read(ckv_p, page_table)     # (B, Pmax*PS, rank)
+            kr = _paged_read(kr_p, page_table)
+            kv_len = lens + 1
+            new_cache = {"ckv_pages": ckv_p, "kr_pages": kr_p}
+        elif jnp.ndim(cache_index):
+            idx = cache_index
+            ckv = cache["ckv"].at[jnp.arange(b), idx].set(
+                ckv_new[:, 0].astype(cache["ckv"].dtype))
+            kr = cache["kr"].at[jnp.arange(b), idx].set(
+                kr_new[:, 0].astype(cache["kr"].dtype))
+            kv_len = idx + 1
+            new_cache = {"ckv": ckv, "kr": kr}
+        else:
+            idx = cache_index
+            ckv = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv_new, idx, axis=1)
+            kr = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr_new, idx, axis=1)
+            kv_len = jnp.broadcast_to(idx + 1, (b,))
+            new_cache = {"ckv": ckv, "kr": kr}
         t = ckv.shape[1]
         q_abs = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"])
         s_ = (jnp.einsum("bshl,btl->bhst", q_abs, ckv)
               + jnp.einsum("bshr,btr->bhst", q_rope, kr)
               ).astype(jnp.float32) * ((nope + rp) ** -0.5)
-        mask = jnp.arange(t)[None, :] < (idx + 1)
+        mask = jnp.arange(t)[None, :] < kv_len[:, None]
         s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
         w = jax.nn.softmax(s_, axis=-1).astype(x.dtype)
         out_lat = jnp.einsum("bhst,btl->bshl", w, ckv)
         out = jnp.einsum("bshl,lhv->bshv", out_lat, p["w_uv"])
-        new_cache = {"ckv": ckv, "kr": kr}
     else:
         # train / prefill: materialize per-head K,V (flash-compatible)
         t = s

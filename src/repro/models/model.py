@@ -150,15 +150,17 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def _apply_mixer(p, x, kind, cfg, *, positions, cache, cache_index,
-                 return_cache):
+                 return_cache, page_table=None):
     if kind == "attn":
         if cfg.attention == "mla":
             return A.apply_mla(p, x, cfg, positions=positions, cache=cache,
                                cache_index=cache_index,
-                               return_cache=return_cache)
+                               return_cache=return_cache,
+                               page_table=page_table)
         return A.apply_gqa(p, x, cfg, positions=positions, cache=cache,
                            cache_index=cache_index,
-                           return_cache=return_cache)
+                           return_cache=return_cache,
+                           page_table=page_table)
     if kind == "mamba":
         return S.apply_mamba(p, x, cfg, cache=cache,
                              return_cache=return_cache)
@@ -170,13 +172,14 @@ def _apply_mixer(p, x, kind, cfg, *, positions, cache, cache_index,
 
 def _apply_layer(p, x, kind, cfg, *, layer_idx, positions, moe_groups,
                  cache=None, cache_index=None, return_cache=False,
-                 enc_out=None):
+                 enc_out=None, page_table=None):
     """Returns (x, aux, new_cache)."""
     mix_cache = cache["mixer"] if cache else None
     h = L.apply_norm(p["norm1"], x, cfg)
     y, new_mix = _apply_mixer(p["mixer"], h, kind, cfg, positions=positions,
                               cache=mix_cache, cache_index=cache_index,
-                              return_cache=return_cache)
+                              return_cache=return_cache,
+                              page_table=page_table)
     x = constrain(x + y, "act")
 
     new_cross = None
@@ -244,7 +247,11 @@ def _apply_encoder(params, enc_embed, cfg: ArchConfig):
 
 
 def _positions_for(cfg: ArchConfig, b: int, s: int, offset=0):
-    pos = jnp.arange(s, dtype=jnp.int32)[None] + offset   # (B,S) via bcast
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim:                                     # per-sequence offsets
+        pos = jnp.arange(s, dtype=jnp.int32)[None] + off[:, None]
+    else:
+        pos = jnp.arange(s, dtype=jnp.int32)[None] + off  # (B,S) via bcast
     pos = jnp.broadcast_to(pos, (b, s))
     if cfg.rope == "mrope":
         return jnp.broadcast_to(pos[None], (3, b, s))
@@ -256,11 +263,14 @@ def apply_model(params, tokens, cfg: ArchConfig, *,
                 mode: str = "train", moe_groups: int = 1,
                 remat_policy: str = "full",
                 logits_chunk: int = 0,
-                param_specs=None):
+                param_specs=None, page_table=None):
     """Returns (logits, aux_loss, new_cache).
 
     mode: "train" (no cache), "prefill" (returns populated cache),
-          "decode" (tokens (B,1), cache + cache_index required).
+          "decode" (tokens (B,1), cache + cache_index required;
+          cache_index may be scalar or (B,) per-sequence lengths, and
+          with a paged cache ``page_table`` (B, Pmax) routes attention
+          KV through the page pools — see repro.serve.kv_cache).
     """
     b, s = tokens.shape
     decode = mode == "decode"
@@ -284,7 +294,9 @@ def apply_model(params, tokens, cfg: ArchConfig, *,
     x = constrain(L.embed_tokens(params["embed"], tokens, cfg), "act")
     if cfg.rope == "learned":
         ptab = params["embed"]["pos"]
-        if decode:
+        if decode and jnp.ndim(cache_index):
+            pe = ptab[cache_index][:, None]          # (B, 1, d)
+        elif decode:
             pe = jax.lax.dynamic_slice_in_dim(ptab, cache_index, 1)[None]
         else:
             pe = ptab[None, :s]
@@ -317,7 +329,8 @@ def apply_model(params, tokens, cfg: ArchConfig, *,
                 positions=positions, moe_groups=moe_groups,
                 cache=blk_caches[pos] if cache is not None else None,
                 cache_index=cache_index if decode else None,
-                return_cache=prefill, enc_out=enc_out)
+                return_cache=prefill, enc_out=enc_out,
+                page_table=page_table if decode else None)
             aux = aux + a
             new_caches.append(nc)
         out_caches = tuple(new_caches) if (decode or prefill) else None

@@ -1,0 +1,25 @@
+"""repro.serve — the redundancy-aware serving subsystem.
+
+Layers (DESIGN.md §9):
+
+- ``kv_cache``  paged KV/SSM cache: fixed-size pages, per-request page
+                tables, alloc/free on admission/eviction.
+- ``scheduler`` continuous batching: admit/prefill/decode/retire queues,
+                slot reuse across requests of different lengths.
+- ``engine``    model-coupled serving loop over the paged cache.
+- ``dispatch``  the paper's first-(n-r) waiting rule (Algorithm 1)
+                applied to replicated inference, with Byzantine-replica
+                majority vote.
+"""
+from repro.serve.kv_cache import (PageAllocator, PagedCacheConfig,
+                                  PagedKVCache, pages_needed)
+from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.engine import ServeEngine
+from repro.serve.dispatch import (DispatchConfig, DispatchResult,
+                                  RedundantDispatcher)
+
+__all__ = [
+    "PageAllocator", "PagedCacheConfig", "PagedKVCache", "pages_needed",
+    "Request", "RequestState", "Scheduler", "ServeEngine",
+    "DispatchConfig", "DispatchResult", "RedundantDispatcher",
+]

@@ -1,0 +1,123 @@
+"""Redundancy-aware request dispatch (DESIGN.md §9).
+
+The paper's Algorithm 1 waits for the first n-r gradient arrivals and
+drops the stragglers; the identical rule applies to replicated inference
+(Wu et al., arXiv:2303.18034; Liu/Gupta/Vaidya, arXiv:2211.08622): fan a
+request out to n model replicas, take the first n-r completions, answer
+from those. Honest replicas run the same weights and greedy decoding, so
+*any* non-empty honest subset returns the identical token stream — the
+redundancy r buys tail latency, not approximation (contrast training,
+where dropping gradients costs (r, eps)-bounded error).
+
+Byzantine replicas are the serving twin of §4's eq. (17): a faulty
+replica returns an arbitrary token stream (modeled by corrupting the
+honest one through ``core.byzantine.ATTACKS``) and, worst case, arrives
+first — the same adversarial ordering the training engine uses. The
+server recovers by per-position majority vote over the n-r received
+streams, sound while the received set keeps an honest majority:
+n - r - f > (n - r) / 2.
+
+Latency is simulated with the training engine's heavy-tail
+``LatencyModel`` — the point of the benchmark/tests is the *shape* of the
+p99-vs-r curve, which only needs the paper's §5 straggler statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.async_engine import LatencyModel, default_latency
+from repro.core.byzantine import ATTACKS
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    n_replicas: int
+    r: int = 0                          # proceed after n - r completions
+    byz_ids: Tuple[int, ...] = ()
+    attack: Optional[str] = None        # key into byzantine.ATTACKS
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0 <= self.r < self.n_replicas:
+            raise ValueError(f"need 0 <= r < n, got r={self.r}")
+        wait = self.n_replicas - self.r
+        if self.byz_ids and len(self.byz_ids) >= (wait + 1) // 2:
+            raise ValueError(
+                f"{len(self.byz_ids)} Byzantine replicas can outvote the "
+                f"{wait}-reply quorum")
+
+
+@dataclasses.dataclass
+class DispatchResult:
+    tokens: np.ndarray                  # (L,) int32, majority-voted
+    round_latency: float                # arrival time of the last used reply
+    used: Tuple[int, ...]               # replica ids that made S
+    n_received: int
+
+
+def _majority_vote(streams: np.ndarray) -> np.ndarray:
+    """(m, L) int -> (L,) per-position mode (ties -> smallest id, which is
+    deterministic and irrelevant under an honest majority)."""
+    out = np.empty(streams.shape[1], streams.dtype)
+    for i in range(streams.shape[1]):
+        vals, counts = np.unique(streams[:, i], return_counts=True)
+        out[i] = vals[np.argmax(counts)]
+    return out
+
+
+class RedundantDispatcher:
+    """``replica_fn(replica_id, request) -> (L,) int32 tokens`` is the
+    deployment: honest replicas must be deterministic replicas of the same
+    model (greedy decode). The dispatcher adds the waiting rule, the
+    adversarial replicas, and the vote."""
+
+    def __init__(self, replica_fn: Callable[[int, np.ndarray], np.ndarray],
+                 cfg: DispatchConfig,
+                 latency: Optional[LatencyModel] = None):
+        self.replica_fn = replica_fn
+        self.cfg = cfg
+        self.lat = latency or default_latency(cfg.n_replicas)
+        self.rng = np.random.default_rng(cfg.seed)
+
+    def dispatch(self, request: np.ndarray,
+                 wait_for_all: bool = False) -> DispatchResult:
+        c = self.cfg
+        lat = self.lat.sample(self.rng)
+        order_key = lat.copy()
+        for j in c.byz_ids:                 # adversarial worst case: first
+            order_key[j] = 0.0
+        wait = c.n_replicas if wait_for_all else c.n_replicas - c.r
+        chosen = np.argsort(order_key)[:wait]
+
+        streams = []
+        for j in chosen:
+            toks = np.asarray(self.replica_fn(int(j), request), np.int64)
+            if j in c.byz_ids and c.attack:
+                g = ATTACKS[c.attack](toks.astype(np.float64), self.rng)
+                toks = np.abs(np.rint(g)).astype(np.int64)
+            streams.append(toks)
+        tokens = _majority_vote(np.stack(streams)).astype(np.int32)
+        return DispatchResult(tokens=tokens,
+                              round_latency=float(np.max(order_key[chosen])),
+                              used=tuple(int(j) for j in np.sort(chosen)),
+                              n_received=wait)
+
+    def serve(self, requests: Sequence[np.ndarray],
+              wait_for_all: bool = False):
+        """Dispatch a workload; returns (list of token arrays, latencies).
+        Reseed (same cfg.seed) before calling to compare waiting rules on
+        identical latency draws."""
+        results = [self.dispatch(r, wait_for_all=wait_for_all)
+                   for r in requests]
+        return ([r.tokens for r in results],
+                np.array([r.round_latency for r in results]))
+
+    def reseed(self) -> None:
+        self.rng = np.random.default_rng(self.cfg.seed)
+
+
+def tail_latency(lats: np.ndarray, q: float = 99.0) -> float:
+    return float(np.percentile(lats, q))

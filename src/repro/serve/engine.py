@@ -1,0 +1,170 @@
+"""Model-coupled serving loop: continuous batching over the paged cache.
+
+One engine owns one jitted decode step of fixed batch ``num_slots``; every
+wall-clock step it (1) admits waiting requests into free slots (batched
+prefill per prompt-length group — the first generated token comes from the
+prefill logits, never from a second full forward), (2) runs one batched
+decode across all slots (idle slots point at the null page and are
+masked), (3) commits the decoded tokens and retires finished requests,
+freeing their pages and slots for the next admissions.
+
+Greedy (argmax) decoding, matching the rest of the repo's drivers.
+
+MoE runs *drop-free* at inference (capacity_factor raised to
+num_experts / top_k, so capacity >= tokens-per-group always): capacity
+binning is a training-throughput trade-off, and at serving time dropping
+would make a request's tokens depend on whatever else shares its decode
+batch — continuous batching must be batch-composition-invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import apply_model
+from repro.serve.kv_cache import PagedCacheConfig, PagedKVCache
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig,
+                 ccfg: Optional[PagedCacheConfig] = None):
+        self.params = params
+        self.cfg = cfg
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(
+                    cfg.moe,
+                    capacity_factor=float(cfg.moe.num_experts)
+                    / cfg.moe.top_k))
+        self.infer_cfg = cfg
+        self.ccfg = ccfg or PagedCacheConfig()
+        self.kv = PagedKVCache(cfg, self.ccfg)
+        self.sched = Scheduler(self.ccfg)
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "admitted": 0, "retired": 0}
+        self._next_rid = 0
+
+        def _prefill(params, tokens):
+            logits, _, cache = apply_model(params, tokens, cfg,
+                                           mode="prefill",
+                                           remat_policy="none")
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def _decode(params, tokens, cache, lens, tbl):
+            logits, _, new_cache = apply_model(
+                params, tokens, cfg, mode="decode", cache=cache,
+                cache_index=lens, page_table=tbl, remat_policy="none")
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._prefill = jax.jit(_prefill)
+        # donate the cache so the single-token page append updates the
+        # pools in place instead of copying every pool every step (the
+        # CPU backend can't donate and would only warn, so skip there)
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+        # prompts admit in groups of one padded length each; padding to a
+        # page multiple bounds the jit shape set to max_pages_per_seq
+        # buckets. Right-padding is invisible to *causal attention*
+        # prefixes, but a recurrent (SSM/RWKV) state would absorb the pad
+        # garbage — those archs bucket by exact length instead.
+        self._pad_buckets = all(k == "attn"
+                                for k in self.infer_cfg.layer_pattern)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("need max_new_tokens >= 1")
+        total = prompt.size + max_new_tokens
+        cap = (self.ccfg.num_pages - 1) * self.ccfg.page_size
+        if total > min(cap, self.ccfg.max_seq_len):
+            raise ValueError(f"request of {total} tokens exceeds cache "
+                             f"capacity {min(cap, self.ccfg.max_seq_len)}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, prompt=prompt,
+                                  max_new_tokens=max_new_tokens))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        admitted = self.sched.admissions(self.kv.alloc.n_free)
+        if not admitted:
+            if not self.sched.active and self.sched.waiting:
+                raise RuntimeError(
+                    "head request can never be admitted (page pool too "
+                    "small even when idle)")
+            return
+        self.stats["admitted"] += len(admitted)
+        ps = self.ccfg.page_size
+        groups: Dict[int, List[RequestState]] = {}
+        for st in admitted:
+            s0 = st.req.prompt_len
+            bucket = -(-s0 // ps) * ps if self._pad_buckets else s0
+            groups.setdefault(bucket, []).append(st)
+        for bucket, group in sorted(groups.items()):
+            prompts = np.zeros((len(group), bucket), np.int32)
+            for i, st in enumerate(group):
+                prompts[i, : st.req.prompt_len] = st.req.prompt
+            first, cache = self._prefill(self.params, jnp.asarray(prompts))
+            self.stats["prefill_calls"] += 1
+            first = np.asarray(first)
+            for i, st in enumerate(group):
+                s0 = st.req.prompt_len
+                one = jax.tree.map(lambda l, i=i: l[:, i:i + 1], cache)
+                # admit() scatters only the first s0 tokens of each page,
+                # so the causal-invisible right-pad never enters the cache
+                self.kv.admit(st.slot, one, s0, st.req.total_len)
+                st.pending = int(first[i, s0 - 1])
+                st.generated.append(st.pending)
+                if st.done:         # max_new_tokens == 1: no decode needed
+                    self._retire(st.slot)
+
+    def _retire(self, slot: int) -> None:
+        self.kv.evict(slot)
+        self.sched.retire(slot)
+        self.stats["retired"] += 1
+
+    def step(self) -> None:
+        """One serving step: admit -> batched decode -> commit/retire."""
+        self._admit()
+        if not self.sched.active:
+            return
+        toks = np.zeros((self.ccfg.num_slots, 1), np.int32)
+        for slot, st in self.sched.active.items():
+            toks[slot, 0] = st.pending
+        nxt, new_cache = self._decode(
+            self.params, jnp.asarray(toks), self.kv.cache,
+            self.kv.kv_lens_dev, self.kv.page_table_dev)
+        self.stats["decode_steps"] += 1
+        self.kv.update(new_cache)
+        active = list(self.sched.active)
+        self.kv.commit_token(active)     # each slot's pending token landed
+        nxt = np.asarray(nxt)
+        for slot in active:
+            st = self.sched.active[slot]
+            st.pending = int(nxt[slot])
+            st.generated.append(st.pending)
+            if st.done:
+                self._retire(slot)
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drive to completion; returns rid -> generated tokens."""
+        steps = 0
+        while not self.sched.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving loop did not drain")
+        return {rid: np.asarray(st.generated, np.int32)
+                for rid, st in self.sched.finished.items()}

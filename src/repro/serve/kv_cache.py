@@ -1,0 +1,247 @@
+"""Paged KV/SSM cache for serving (DESIGN.md §9).
+
+The pad-to-max_len decode cache wastes O(num_slots * max_len) HBM on
+whatever the *longest possible* request needs; the paged cache stores KV
+in fixed-size physical pages and gives every admitted request a page
+table, so memory scales with the tokens actually resident. Attention KV
+(and MLA's latent cache) is paged along the sequence axis; recurrent
+(SSM/RWKV) state has no sequence axis and is slot-indexed instead — one
+row per serving slot, overwritten on admission.
+
+Layout per pattern position (mirrors ``models.model.init_cache``; the
+leading axis is ``n_periods`` so the stack scans):
+
+- GQA:  ``{"k_pages", "v_pages"}: (P, N, PS, n_kv, hd)``
+- MLA:  ``{"ckv_pages": (P, N, PS, rank), "kr_pages": (P, N, PS, rope)}``
+- mamba/rwkv: dense slot states, exactly ``init_cache`` with
+  ``batch=num_slots``.
+
+Physical page 0 is reserved as the *null page*: idle slots' page tables
+point at it, so their (masked, garbage) decode writes land somewhere
+harmless and never clobber a live request. The allocator therefore hands
+out pages 1..N-1.
+
+Logical page p of the sequence in slot s lives in physical page
+``page_table[s, p]`` — shared by every layer (each layer has its own
+pools, all addressed by the one table, vLLM-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import init_cache
+
+PAGED_SUFFIX = "_pages"
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    num_slots: int = 4            # concurrent decode batch size
+    page_size: int = 16           # tokens per page
+    num_pages: int = 64           # physical pages incl. the null page 0
+    max_pages_per_seq: int = 16   # page-table width
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.page_size * self.max_pages_per_seq
+
+
+def pages_needed(total_len: int, page_size: int) -> int:
+    return -(-total_len // page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over physical pages 1..num_pages-1 (page 0 is
+    the reserved null page). Alloc/free are O(n) and checked: a page is
+    never handed out twice, never freed twice, never freed while free."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + null")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+    def check_invariants(self) -> bool:
+        seen = set(self._free)
+        assert len(seen) == len(self._free), "duplicate free pages"
+        assert not (seen & self._used), "page both free and used"
+        assert 0 not in seen and 0 not in self._used, "null page leaked"
+        assert len(seen) + len(self._used) == self.num_pages - 1
+        return True
+
+
+def _paged_block(cfg: ArchConfig, ccfg: PagedCacheConfig, dt):
+    """Paged mixer dict for one attention pattern position."""
+    P, N, PS = cfg.n_periods, ccfg.num_pages, ccfg.page_size
+
+    def z(shape):
+        return jnp.zeros(shape, dt)
+
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return {"ckv_pages": z((P, N, PS, m.kv_lora_rank)),
+                "kr_pages": z((P, N, PS, m.qk_rope_head_dim))}
+    hd = cfg.resolved_head_dim
+    return {"k_pages": z((P, N, PS, cfg.n_kv_heads, hd)),
+            "v_pages": z((P, N, PS, cfg.n_kv_heads, hd))}
+
+
+class PagedKVCache:
+    """Owns the device cache pytree + the host-side allocator/page table.
+
+    The engine passes ``.cache`` (pytree) / ``.page_table_dev`` /
+    ``.kv_lens_dev`` into the jitted decode step and stores the returned
+    pytree back via :meth:`update`; admission/eviction mutate the host
+    bookkeeping and scatter/clear device pages.
+    """
+
+    def __init__(self, cfg: ArchConfig, ccfg: PagedCacheConfig):
+        if cfg.encoder_decoder:
+            raise NotImplementedError(
+                "paged serving supports decoder-only archs")
+        self.cfg = cfg
+        self.ccfg = ccfg
+        self.alloc = PageAllocator(ccfg.num_pages)
+        S = ccfg.num_slots
+        self.page_table = np.zeros((S, ccfg.max_pages_per_seq), np.int32)
+        self.kv_lens = np.zeros((S,), np.int32)
+        self._slot_pages: Dict[int, List[int]] = {}
+        dt = jnp.dtype(cfg.compute_dtype)
+
+        # recurrent layers come straight from init_cache at batch=num_slots;
+        # attention layers swap the (B, max_len) KV for page pools
+        dense = init_cache(cfg, S, ccfg.page_size)  # seq extent unused
+        blocks = []
+        for pos, kind in enumerate(cfg.layer_pattern):
+            if kind == "attn":
+                blocks.append({"mixer": _paged_block(cfg, ccfg, dt),
+                               "ffn": {}})
+            else:
+                blocks.append(dense[pos])
+        self.cache = tuple(blocks)
+
+    # -- device views ----------------------------------------------------
+    # NB: explicit copies. On the CPU backend ``jnp.asarray(np_array)`` is
+    # zero-copy, and the host arrays are mutated in place (commit_token /
+    # admit) while a dispatched decode may still be reading the view.
+    @property
+    def page_table_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.page_table.copy())
+
+    @property
+    def kv_lens_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.kv_lens.copy())
+
+    def update(self, new_cache) -> None:
+        self.cache = new_cache
+
+    # -- admission / eviction --------------------------------------------
+    def can_admit(self, total_len: int) -> bool:
+        need = pages_needed(total_len, self.ccfg.page_size)
+        return (need <= self.ccfg.max_pages_per_seq
+                and need <= self.alloc.n_free)
+
+    def admit(self, slot: int, prefill_cache, prompt_len: int,
+              total_len: int) -> None:
+        """Move one request's prefill cache (batch axis of size 1) into
+        slot ``slot``, reserving pages for the whole ``total_len``
+        (prompt + max new tokens — conservative vLLM-style reservation,
+        so decode never blocks mid-flight on an empty pool)."""
+        ccfg = self.ccfg
+        ps = ccfg.page_size
+        need = pages_needed(total_len, ps)
+        if need > ccfg.max_pages_per_seq:
+            raise ValueError(
+                f"request of {total_len} tokens needs {need} pages > "
+                f"table width {ccfg.max_pages_per_seq}")
+        if slot in self._slot_pages:
+            raise ValueError(f"slot {slot} already occupied")
+        pages = self.alloc.alloc(need)
+        self._slot_pages[slot] = pages
+        row = np.zeros((ccfg.max_pages_per_seq,), np.int32)
+        row[:need] = pages
+        self.page_table[slot] = row
+        self.kv_lens[slot] = prompt_len
+
+        blocks = list(self.cache)
+        for pos, kind in enumerate(self.cfg.layer_pattern):
+            blk = dict(blocks[pos])
+            pre = prefill_cache[pos]
+            if kind == "attn":
+                mix = dict(blk["mixer"])
+                for name, pool in mix.items():
+                    dense = pre["mixer"][name[: -len(PAGED_SUFFIX)]]
+                    # dense: (P, 1, s0, ...); scatter page-by-page
+                    for i in range(pages_needed(prompt_len, ps)):
+                        n = min(ps, prompt_len - i * ps)
+                        chunk = dense[:, 0, i * ps: i * ps + n]
+                        mix[name] = mix[name].at[:, pages[i], :n].set(
+                            chunk.astype(mix[name].dtype))
+                blk["mixer"] = mix
+            else:
+                # recurrent state: one row per slot
+                blk["mixer"] = {
+                    k: v.at[:, slot].set(
+                        pre["mixer"][k][:, 0].astype(v.dtype))
+                    for k, v in blk["mixer"].items()}
+                blk["ffn"] = {
+                    k: v.at[:, slot].set(
+                        pre["ffn"][k][:, 0].astype(v.dtype))
+                    for k, v in blk["ffn"].items()}
+            blocks[pos] = blk
+        self.cache = tuple(blocks)
+
+    def evict(self, slot: int) -> None:
+        """Free the slot's pages and point its table at the null page."""
+        pages = self._slot_pages.pop(slot, None)
+        if pages is None:
+            raise ValueError(f"slot {slot} not occupied")
+        self.alloc.free(pages)
+        self.page_table[slot] = 0
+        self.kv_lens[slot] = 0
+
+    def commit_token(self, slots: Sequence[int]) -> None:
+        """Account the token the decode step just wrote for each slot."""
+        for s in slots:
+            self.kv_lens[s] += 1
+
+    # -- debug / test helpers --------------------------------------------
+    def gather_dense(self, slot: int, pos: int, name: str) -> jnp.ndarray:
+        """Contiguous (P, kv_len, ...) view of one slot's paged leaf."""
+        ps = self.ccfg.page_size
+        ln = int(self.kv_lens[slot])
+        pool = self.cache[pos]["mixer"][name]
+        tbl = self.page_table[slot]
+        out = pool[:, tbl[: pages_needed(max(ln, 1), ps)]]
+        out = out.reshape(pool.shape[0], -1, *pool.shape[3:])
+        return out[:, :ln]

@@ -1,0 +1,102 @@
+"""Continuous-batching scheduler (DESIGN.md §9).
+
+Requests flow waiting → active(slot) → finished. Admission is FIFO and
+gated on two resources: a free *slot* (row of the fixed decode batch) and
+enough free *pages* for the request's whole lifetime
+(ceil((prompt + max_new) / page_size) — conservative reservation, so a
+running request can never stall mid-decode on an empty pool). Slots are
+reused across requests of different lengths: retiring a 10-token request
+frees its slot for a 500-token one and vice versa.
+
+The scheduler is pure bookkeeping — it never touches the model or device
+memory. The engine asks it *what* to admit/retire and performs the
+prefill/eviction against the paged cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.kv_cache import PagedCacheConfig, pages_needed
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (s0,) int32 token ids
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    pending: Optional[int] = None       # produced but not yet in the cache
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.req.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, ccfg: PagedCacheConfig):
+        self.ccfg = ccfg
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, RequestState] = {}       # slot -> state
+        self.finished: Dict[int, RequestState] = {}     # rid -> state
+        self._free_slots: List[int] = list(range(ccfg.num_slots - 1, -1, -1))
+        # occupancy telemetry for the slot-pressure tests
+        self.peak_active = 0
+        self.total_admitted = 0
+
+    # -- queue ops --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        need = pages_needed(req.total_len, self.ccfg.page_size)
+        if need > self.ccfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.rid}: {req.total_len} tokens need {need} "
+                f"pages > table width {self.ccfg.max_pages_per_seq}")
+        self.waiting.append(req)
+
+    def admissions(self, free_pages: int) -> List[RequestState]:
+        """Pop FIFO-admissible requests: a free slot AND a full-lifetime
+        page reservation each. Head-of-line blocking is deliberate (no
+        starvation of big requests)."""
+        out: List[RequestState] = []
+        budget = free_pages
+        while self.waiting and self._free_slots:
+            need = pages_needed(self.waiting[0].total_len,
+                                self.ccfg.page_size)
+            if need > budget:
+                break
+            req = self.waiting.popleft()
+            slot = self._free_slots.pop()
+            st = RequestState(req=req, slot=slot)
+            self.active[slot] = st
+            budget -= need
+            out.append(st)
+            self.total_admitted += 1
+        self.peak_active = max(self.peak_active, len(self.active))
+        return out
+
+    def retire(self, slot: int) -> RequestState:
+        st = self.active.pop(slot)
+        self._free_slots.append(slot)
+        self.finished[st.req.rid] = st
+        return st
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.active

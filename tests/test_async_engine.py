@@ -92,6 +92,53 @@ def test_server_snapshot_restart_deterministic():
     np.testing.assert_allclose(srv.x, x_a, rtol=1e-10)
 
 
+def test_reconfigure_preserves_history():
+    """Regression: History must be carried across snapshot/restore —
+    mid-run reconfigure() used to silently zero bytes_tx / comm_time /
+    loss, corrupting comm-savings comparisons spanning the switch."""
+    costs = _costs()
+    srv = AsyncDGDServer(lambda j, x, rng: costs.grad(j, x), np.zeros(D),
+                         _cfg(r=1), loss_fn=costs.loss)
+    srv.run(30)
+    h0 = srv.engine.hist
+    bytes0, n0 = h0.bytes_tx, len(h0.loss)
+    assert bytes0 > 0 and n0 == 30
+    srv.reconfigure(r=3)
+    h1 = srv.run(20)
+    assert len(h1.loss) == n0 + 20               # history continues
+    assert len(h1.comm_time) == n0 + 20
+    assert h1.bytes_tx > bytes0                  # monotone, not reset
+    # wall clock keeps increasing across the switch
+    assert h1.wall[n0] > h1.wall[n0 - 1]
+
+
+def test_snapshot_hist_isolated_from_live_run():
+    """The snapshot's history is a copy: running on after snapshot() must
+    not mutate it, and restoring twice must not share lists."""
+    costs = _costs()
+    srv = AsyncDGDServer(lambda j, x, rng: costs.grad(j, x), np.zeros(D),
+                         _cfg(r=1), loss_fn=costs.loss)
+    srv.run(10)
+    snap = srv.snapshot()
+    srv.run(10)
+    assert len(snap["hist"].loss) == 10          # untouched by the run
+    srv.restore(snap, srv.engine.cfg)
+    srv.run(5)
+    assert len(snap["hist"].loss) == 10          # untouched by restore+run
+
+
+def test_fresh_mode_does_not_bill_crashed_broadcasts():
+    """Regression: broadcast bytes are per recipient — an agent crashed
+    for the whole run must not be billed."""
+    iters = 20
+    base = _mk(_cfg(r=2))
+    h_all = base.run(iters)
+    crashed = _mk(_cfg(r=2, crashes=((0, 0.0, 1e9), (1, 0.0, 1e9))))
+    h_cr = crashed.run(iters)
+    down = 4 * D                                 # f32 params per broadcast
+    assert h_all.bytes_tx - h_cr.bytes_tx == iters * 2 * down
+
+
 def test_elastic_reconfigure_r_midrun():
     costs = _costs()
     srv = AsyncDGDServer(lambda j, x, rng: costs.grad(j, x), np.zeros(D),

@@ -1,0 +1,95 @@
+"""First-(n-r) replica dispatch: token parity with the wait-for-all
+baseline, strictly lower tail latency under stragglers, Byzantine-replica
+majority vote, and quorum validation (the acceptance gate for applying
+Algorithm 1's waiting rule to inference)."""
+import numpy as np
+import pytest
+
+from repro.core.async_engine import default_latency
+from repro.serve.dispatch import (DispatchConfig, RedundantDispatcher,
+                                  tail_latency)
+
+N = 10
+
+
+def _replica_fn(j, request):
+    """Deterministic stand-in for 'replicas of the same greedy model':
+    the response depends only on the request, never on the replica."""
+    rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
+    return rng.integers(0, 256, 12).astype(np.int32)
+
+
+def _requests(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, 8).astype(np.int32) for _ in range(n)]
+
+
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_first_n_minus_r_matches_wait_for_all_and_cuts_p99(r):
+    """The paper's Algorithm-1 acceptance check for serving: identical
+    tokens, strictly lower simulated p99 round latency under
+    default_latency stragglers."""
+    reqs = _requests(300)
+    lat = default_latency(N, n_stragglers=3, factor=10.0, seed=2)
+
+    d = RedundantDispatcher(_replica_fn, DispatchConfig(n_replicas=N, r=r),
+                            latency=lat)
+    toks_r, lats_r = d.serve(reqs)
+    d.reseed()                                   # identical latency draws
+    toks_all, lats_all = d.serve(reqs, wait_for_all=True)
+
+    for a, b in zip(toks_r, toks_all):
+        np.testing.assert_array_equal(a, b)
+    # per-request: dropping r replicas can never be slower
+    assert (lats_r <= lats_all).all()
+    assert tail_latency(lats_r, 99) < tail_latency(lats_all, 99)
+    assert tail_latency(lats_r, 50) <= tail_latency(lats_all, 50)
+
+
+def test_deeper_redundancy_monotone_p99():
+    reqs = _requests(200, seed=1)
+    p99 = []
+    for r in (0, 1, 2, 3):
+        d = RedundantDispatcher(
+            _replica_fn, DispatchConfig(n_replicas=N, r=r, seed=5),
+            latency=default_latency(N, 3, 10.0, seed=3))
+        _, lats = d.serve(reqs)
+        p99.append(tail_latency(lats, 99))
+    assert p99[0] > p99[1] > p99[2] > p99[3]     # 3 stragglers to shed
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "random_gaussian",
+                                    "large_norm", "zero"])
+def test_byzantine_majority_vote_recovers(attack):
+    """Byzantine replicas arrive first (worst case) yet the vote over the
+    n-r received streams returns the honest tokens."""
+    cfg = DispatchConfig(n_replicas=5, r=1, byz_ids=(0,), attack=attack,
+                         seed=7)
+    d = RedundantDispatcher(_replica_fn, cfg,
+                            latency=default_latency(5, 1, 8.0, seed=7))
+    for req in _requests(20, seed=2):
+        res = d.dispatch(req)
+        assert 0 in res.used                     # adversary did arrive
+        np.testing.assert_array_equal(res.tokens, _replica_fn(1, req))
+
+
+def test_quorum_validation():
+    with pytest.raises(ValueError):
+        DispatchConfig(n_replicas=4, r=4)
+    with pytest.raises(ValueError):
+        # 2 byzantine of a 3-reply quorum: vote can be outvoted
+        DispatchConfig(n_replicas=5, r=2, byz_ids=(0, 1),
+                       attack="sign_flip")
+
+
+def test_dispatch_uses_exactly_n_minus_r():
+    calls = []
+
+    def spy(j, request):
+        calls.append(j)
+        return _replica_fn(j, request)
+
+    d = RedundantDispatcher(spy, DispatchConfig(n_replicas=N, r=3),
+                            latency=default_latency(N, 2, 6.0, seed=1))
+    res = d.dispatch(_requests(1)[0])
+    assert len(calls) == N - 3 == res.n_received == len(res.used)

@@ -1,0 +1,86 @@
+"""Continuous-batching scheduler: FIFO admission under slot and page
+pressure, slot reuse across requests of different lengths, drain."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import PagedCacheConfig, pages_needed
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _req(rid, s0, new):
+    return Request(rid=rid, prompt=np.zeros(s0, np.int32),
+                   max_new_tokens=new)
+
+
+def test_submit_rejects_wider_than_table():
+    sch = Scheduler(PagedCacheConfig(num_slots=2, page_size=4,
+                                     max_pages_per_seq=3))
+    with pytest.raises(ValueError):
+        sch.submit(_req(0, 10, 3))           # 13 tokens -> 4 pages > 3
+
+
+def test_admission_respects_slots_fifo():
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=64,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg)
+    for i in range(5):
+        sch.submit(_req(i, 4, 4))
+    adm = sch.admissions(free_pages=63)
+    assert [st.req.rid for st in adm] == [0, 1]      # FIFO, 2 slots
+    assert sch.admissions(free_pages=63) == []       # no free slot
+    sch.retire(adm[0].slot)
+    adm2 = sch.admissions(free_pages=63)
+    assert [st.req.rid for st in adm2] == [2]        # reused slot
+    assert adm2[0].slot == adm[0].slot
+
+
+def test_admission_respects_page_budget():
+    ccfg = PagedCacheConfig(num_slots=4, page_size=4, num_pages=8,
+                            max_pages_per_seq=4)
+    sch = Scheduler(ccfg)
+    sch.submit(_req(0, 8, 4))                # 3 pages
+    sch.submit(_req(1, 8, 4))                # 3 pages
+    sch.submit(_req(2, 4, 4))                # 2 pages
+    adm = sch.admissions(free_pages=7)
+    # 3 + 3 admitted; request 2 would need 2 more pages than the 1 left
+    assert [st.req.rid for st in adm] == [0, 1]
+    assert sch.waiting[0].rid == 2
+    # head-of-line: pages freed -> 2 admits next round
+    sch.retire(adm[0].slot)
+    adm2 = sch.admissions(free_pages=4)
+    assert [st.req.rid for st in adm2] == [2]
+
+
+def test_slot_reuse_across_lengths_drain():
+    """Simulated serving loop: 12 requests of mixed lengths through 3
+    slots; every request completes, occupancy never exceeds the slots,
+    slots are reused."""
+    ccfg = PagedCacheConfig(num_slots=3, page_size=4, num_pages=32,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg)
+    rng = np.random.default_rng(0)
+    lens = {}
+    for i in range(12):
+        s0, new = int(rng.integers(1, 17)), int(rng.integers(1, 9))
+        lens[i] = new
+        sch.submit(_req(i, s0, new))
+    free = 31
+    guard = 0
+    while not sch.idle:
+        for st in sch.admissions(free):
+            free -= pages_needed(st.req.total_len, ccfg.page_size)
+        assert len(sch.active) <= ccfg.num_slots
+        # one decode step: every active request yields one token
+        for slot in list(sch.active):
+            st = sch.active[slot]
+            st.generated.append(0)
+            if st.done:
+                free += pages_needed(st.req.total_len, ccfg.page_size)
+                sch.retire(slot)
+        guard += 1
+        assert guard < 1000
+    assert sch.total_admitted == 12
+    assert sch.peak_active <= ccfg.num_slots
+    assert set(sch.finished) == set(range(12))
+    for rid, st in sch.finished.items():
+        assert len(st.generated) == lens[rid]
