@@ -22,14 +22,13 @@ import numpy as np
 
 from repro.core.async_engine import default_latency
 from repro.serve.dispatch import (DispatchConfig, RedundantDispatcher,
-                                  tail_latency)
+                                  honest_tokens, tail_latency)
 
 N_REPLICAS = 10
 
 
 def _replica_fn(j, request):
-    rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
-    return rng.integers(0, 256, 16).astype(np.int32)
+    return honest_tokens(request, length=16)
 
 
 def run_dispatch(n_requests: int = 2000, seed: int = 0):

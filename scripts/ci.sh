@@ -10,6 +10,10 @@
 #          that only pass because auto-dispatch routed to the reference).
 # Stage 4: serving smoke — the tail-latency benchmark end to end, so the
 #          dispatch/engine benchmark path cannot rot.
+# Stage 5: scenario conformance — the repro.sim suite (named fault
+#          scenarios against the T-set/liveness/Theorem-2 checks, property
+#          fuzz, determinism) plus a golden-trace smoke replay that fails
+#          on any behavioral drift vs the committed traces.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,6 +28,13 @@ JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_flash.py \
     tests/test_kernels_cge.py tests/test_kernels_decode.py
 
 echo "== stage 4: serving latency benchmark (smoke) =="
-python benchmarks/serve_latency.py --smoke
+# pyproject's pythonpath=src only applies to pytest, not plain python
+PYTHONPATH=src python benchmarks/serve_latency.py --smoke
+
+echo "== stage 5: scenario conformance + golden-trace replay =="
+# overlaps stage 1 by design (~10s): this is the standalone conformance
+# gate a scenario-touching PR can run without the full fast suite
+python -m pytest -q tests/test_sim_*.py tests/test_property_*.py
+PYTHONPATH=src python -m repro.sim.golden --smoke
 
 echo "CI OK"

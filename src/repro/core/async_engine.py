@@ -40,21 +40,29 @@ class LatencyModel:
     straggler_factor: float = 10.0
     comm: float = 0.05                # one-way message time
 
+    def _finish(self, idx, raw):
+        """The one straggler/comm code path both samplers share (scalar or
+        aligned arrays). numpy's Generator draws batched and sequential
+        lognormals from the same bit stream and the arithmetic here is
+        elementwise-identical either way, so n sequential
+        ``sample_one(j, rng)`` calls (j = 0..n-1) on one generator
+        reproduce ``sample(rng)`` element for element."""
+        raw = np.asarray(raw, float)
+        if self.straggler_ids:
+            slow = np.isin(np.asarray(idx), self.straggler_ids)
+            raw = np.where(slow, raw * self.straggler_factor, raw)
+        return raw + 2 * self.comm          # broadcast + return
+
     def sample(self, rng: np.random.Generator) -> np.ndarray:
-        lat = self.mean * rng.lognormal(0.0, self.sigma, size=self.n_agents)
-        lat = np.asarray(lat)
-        for j in self.straggler_ids:
-            lat[j] *= self.straggler_factor
-        return lat + 2 * self.comm    # broadcast + return
+        raw = self.mean * rng.lognormal(0.0, self.sigma, size=self.n_agents)
+        return self._finish(np.arange(self.n_agents), raw)
 
     def sample_one(self, j: int, rng: np.random.Generator) -> float:
         """One agent's next-iteration latency. The event-driven stale loop
         assigns work to a single agent at a time; sampling the full
         n-agent vector there wasted n-1 draws per assignment."""
-        lat = self.mean * rng.lognormal(0.0, self.sigma)
-        if j in self.straggler_ids:
-            lat *= self.straggler_factor
-        return float(lat + 2 * self.comm)
+        return float(self._finish(j, self.mean * rng.lognormal(0.0,
+                                                               self.sigma)))
 
 
 def default_latency(n_agents: int, n_stragglers: int = 3,
@@ -63,6 +71,78 @@ def default_latency(n_agents: int, n_stragglers: int = 3,
     ids = tuple(rng.choice(n_agents, size=n_stragglers, replace=False))
     return LatencyModel(n_agents=n_agents, straggler_ids=ids,
                         straggler_factor=factor)
+
+
+class Transport:
+    """Event-ordering seam (DESIGN.md §10): every timing, liveness and
+    delivery decision the engine (and ``serve.dispatch``) makes goes
+    through this interface instead of inline rng draws, so a simulator
+    (``repro.sim``) can inject one shared fault model into both the
+    training and the serving stack and replay it byte-for-byte.
+
+    ``rng`` is the caller's generator; the default transport draws from
+    it (preserving the engine's historical bit stream), while simulated
+    transports keep their own seeded stream so event ordering is
+    independent of how many gradient-noise draws the caller consumes.
+    A non-finite latency means "never delivered this round" (message
+    dropped or agent unreachable).
+    """
+
+    def alive(self, j: int, now: float) -> bool:
+        return True
+
+    def round_latencies(self, now: float,
+                        rng: np.random.Generator) -> np.ndarray:
+        """Fresh mode / dispatch: per-agent round-trip latency vector."""
+        raise NotImplementedError
+
+    def task_latency(self, j: int, now: float,
+                     rng: np.random.Generator) -> float:
+        """Stale mode: latency of one agent's next assignment."""
+        raise NotImplementedError
+
+    def delivery_fate(self, j: int, now: float,
+                      rng: np.random.Generator) -> int:
+        """How many copies of a completed stale-mode upload arrive:
+        0 = dropped (work lost, agent re-assigned), 1 = delivered,
+        2 = duplicated (idempotent ledger write, billed twice)."""
+        return 1
+
+    # snapshot/restore hooks (server checkpoints carry transport state so
+    # a restored run replays the same event order as the uninterrupted one)
+    def state_dict(self) -> dict:
+        return {}
+
+    def load_state(self, state: dict) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+class DefaultTransport(Transport):
+    """Historical engine behavior: latencies from a ``LatencyModel`` drawn
+    off the caller's rng; liveness from static crash windows
+    ``(agent, t_start, t_end)`` in virtual wall-clock time."""
+
+    def __init__(self, latency: LatencyModel,
+                 crashes: Sequence[Tuple[int, float, float]] = ()):
+        self.lat = latency
+        self.crashes = tuple(crashes)
+
+    def alive(self, j: int, now: float) -> bool:
+        for (a, t0, t1) in self.crashes:
+            if a == j and t0 <= now < t1:
+                return False
+        return True
+
+    def round_latencies(self, now: float,
+                        rng: np.random.Generator) -> np.ndarray:
+        return self.lat.sample(rng)
+
+    def task_latency(self, j: int, now: float,
+                     rng: np.random.Generator) -> float:
+        return self.lat.sample_one(j, rng)
 
 
 @dataclass
@@ -91,6 +171,8 @@ class History:
     wall: List[float] = field(default_factory=list)
     bytes_tx: int = 0
     staleness: List[float] = field(default_factory=list)   # mean age used
+    max_age: List[float] = field(default_factory=list)     # oldest age used
+    n_rx: List[int] = field(default_factory=list)  # distinct uploads used
 
     @property
     def cum_comm(self) -> np.ndarray:
@@ -102,11 +184,15 @@ class AsyncEngine:
 
     def __init__(self, grad_fn, x0: np.ndarray, cfg: EngineConfig,
                  latency: Optional[LatencyModel] = None,
-                 loss_fn=None, x_star: Optional[np.ndarray] = None):
+                 loss_fn=None, x_star: Optional[np.ndarray] = None,
+                 transport: Optional[Transport] = None):
         self.grad_fn = grad_fn
         self.x = np.asarray(x0, np.float64).copy()
         self.cfg = cfg
         self.lat = latency or default_latency(cfg.n_agents)
+        # a custom transport owns liveness entirely: cfg.crashes only feeds
+        # the default one
+        self.transport = transport or DefaultTransport(self.lat, cfg.crashes)
         self.loss_fn = loss_fn
         self.x_star = x_star
         self.rng = np.random.default_rng(cfg.seed)
@@ -131,10 +217,7 @@ class AsyncEngine:
 
     # ------------------------------------------------------------------
     def _alive(self, j: int, now: float) -> bool:
-        for (a, t0, t1) in self.cfg.crashes:
-            if a == j and t0 <= now < t1:
-                return False
-        return True
+        return self.transport.alive(j, now)
 
     def _send(self, j: int, x: np.ndarray) -> np.ndarray:
         g = self.grad_fn(j, x, self.rng)
@@ -147,19 +230,30 @@ class AsyncEngine:
             np.asarray(self.x - eta * agg), self.cfg.proj_gamma)
 
     def _record(self, round_time: float, mean_age: float = 0.0,
-                n_rx: int = 0, n_bcast: Optional[int] = None) -> None:
+                n_rx: int = 0, n_bcast: Optional[int] = None,
+                max_age: float = 0.0,
+                n_billed: Optional[int] = None) -> None:
+        """``n_rx`` = distinct uploads that entered the aggregate (the
+        liveness witness); ``n_billed`` additionally counts duplicated
+        deliveries for the bytes accounting (defaults to n_rx)."""
         c = self.cfg
+        if n_billed is None:
+            n_billed = n_rx
         self.hist.comm_time.append(round_time)
         self.clock += round_time
         self.hist.wall.append(self.clock)
         self.hist.staleness.append(mean_age)
+        # the oldest gradient that actually entered the aggregate: the
+        # externally checkable witness that rule (15) honored tau
+        self.hist.max_age.append(max_age)
+        self.hist.n_rx.append(n_rx)
         # broadcasts are billed per *recipient*: fresh mode passes the
         # alive count, so crashed agents stop inflating bytes_tx
         if n_bcast is None:
             n_bcast = c.n_agents
         self.hist.bytes_tx += (
             n_bcast * self.x.size * self._down_bytes
-            + n_rx * (self.x.size * self._up_bytes + self._up_overhead))
+            + n_billed * (self.x.size * self._up_bytes + self._up_overhead))
         if self.loss_fn is not None:
             self.hist.loss.append(float(self.loss_fn(self.x)))
         if self.x_star is not None:
@@ -168,16 +262,21 @@ class AsyncEngine:
     # ------------------------------------------------------------------
     def step_fresh(self) -> None:
         c = self.cfg
-        lat = self.lat.sample(self.rng)
+        lat = np.asarray(self.transport.round_latencies(self.clock,
+                                                        self.rng), float)
         alive = np.array([self._alive(j, self.clock) for j in
                           range(c.n_agents)])
-        # byzantine agents arrive first (adversarial worst case)
+        # byzantine agents arrive first (adversarial worst case; the
+        # adversary controls its own messages, so they never drop)
         order_key = lat.copy()
         for j in c.byz_ids:
             order_key[j] = 0.0
         order_key[~alive] = np.inf
         n_alive = int(alive.sum())
-        wait_for = min(c.n_agents - c.r, n_alive)  # elastic degrade
+        # inf latency = undeliverable this round (crashed or message
+        # dropped by the transport) — never enters S^t
+        deliverable = int(np.isfinite(order_key).sum())
+        wait_for = min(c.n_agents - c.r, deliverable)  # elastic degrade
         order = np.argsort(order_key)
         chosen = order[:wait_for]
         received = np.zeros(c.n_agents, bool)
@@ -208,7 +307,7 @@ class AsyncEngine:
             if self._working_on[j] < 0 and self._alive(j, self.clock):
                 self._working_on[j] = t
                 self._busy_until[j] = self.clock + \
-                    self.lat.sample_one(j, self.rng)
+                    self.transport.task_latency(j, self.clock, self.rng)
 
         def usable() -> int:
             return int(np.sum(self._ledger_ts >= t - c.tau))
@@ -216,6 +315,7 @@ class AsyncEngine:
         # advance the event clock delivery-by-delivery until rule-15's
         # wait condition |T^t| >= n - r holds
         guard = 0
+        rx_extra = 0                    # duplicated uploads, billed too
         while usable() < c.n_agents - c.r:
             busy = [j for j in range(c.n_agents) if self._working_on[j] >= 0]
             if not busy:
@@ -225,13 +325,20 @@ class AsyncEngine:
             self.clock = max(self.clock, now)
             ts = int(self._working_on[jn])
             xs = self._x_hist.get(ts)
-            if xs is not None:
-                self._ledger_g[jn] = self._send(jn, xs)
-                self._ledger_ts[jn] = ts
-            if self._alive(jn, self.clock):
+            # an agent dead at completion time loses its in-flight work
+            # (the CrashWindow contract): nothing is sent, so the fate
+            # hook isn't consulted either
+            alive_now = self._alive(jn, self.clock)
+            if xs is not None and alive_now:
+                copies = self.transport.delivery_fate(jn, now, self.rng)
+                if copies > 0:
+                    self._ledger_g[jn] = self._send(jn, xs)
+                    self._ledger_ts[jn] = ts
+                    rx_extra += copies - 1
+            if alive_now:
                 self._working_on[jn] = t
                 self._busy_until[jn] = self.clock + \
-                    self.lat.sample_one(jn, self.rng)
+                    self.transport.task_latency(jn, self.clock, self.rng)
             else:
                 self._working_on[jn] = -1
             guard += 1
@@ -243,9 +350,17 @@ class AsyncEngine:
         ages = (t - self._ledger_ts)[received]
         self._apply(np.asarray(agg), c.step_size(t))
         self.t += 1
-        self._record(self.clock - start,
+        # the event loop already advanced self.clock to the last delivery
+        # time; rewind to the step start so _record's advance lands the
+        # clock exactly there (it used to double-advance, which halved
+        # the effective depth of any wall-clock fault window)
+        round_time = self.clock - start
+        self.clock = start
+        self._record(round_time,
                      float(ages.mean()) if ages.size else 0.0,
-                     int(received.sum()))
+                     int(received.sum()),
+                     max_age=float(ages.max()) if ages.size else 0.0,
+                     n_billed=int(received.sum()) + rx_extra)
 
     # ------------------------------------------------------------------
     def run(self, iters: int) -> History:

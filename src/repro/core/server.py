@@ -13,22 +13,27 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from repro.core.async_engine import (AsyncEngine, EngineConfig, History,
-                                     LatencyModel)
+                                     LatencyModel, Transport)
 
 
 def _copy_hist(h: History) -> History:
-    return History(loss=list(h.loss), dist=list(h.dist),
-                   comm_time=list(h.comm_time), wall=list(h.wall),
-                   bytes_tx=h.bytes_tx, staleness=list(h.staleness))
+    """Field-generic deep-ish copy: new History fields are picked up
+    automatically instead of being silently dropped from snapshots."""
+    kw = {}
+    for f in dataclasses.fields(History):
+        v = getattr(h, f.name)
+        kw[f.name] = list(v) if isinstance(v, list) else v
+    return History(**kw)
 
 
 class AsyncDGDServer:
     def __init__(self, grad_fn, x0, cfg: EngineConfig,
                  latency: Optional[LatencyModel] = None, loss_fn=None,
-                 x_star=None):
+                 x_star=None, transport: Optional[Transport] = None):
         self._mk = dict(grad_fn=grad_fn, latency=latency, loss_fn=loss_fn,
-                        x_star=x_star)
-        self.engine = AsyncEngine(grad_fn, x0, cfg, latency, loss_fn, x_star)
+                        x_star=x_star, transport=transport)
+        self.engine = AsyncEngine(grad_fn, x0, cfg, latency, loss_fn, x_star,
+                                  transport=transport)
 
     # -- checkpoint / restart -------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -50,6 +55,10 @@ class AsyncDGDServer:
             # zero bytes_tx / comm_time / loss and corrupt comm-savings
             # comparisons that span a reconfiguration
             "hist": _copy_hist(e.hist),
+            # stateful transports (repro.sim) keep their own event rng;
+            # without it a restored run would re-order deliveries and
+            # diverge from the uninterrupted one
+            "transport": e.transport.state_dict(),
         }
 
     def restore(self, snap: Dict[str, Any], cfg: EngineConfig) -> None:
@@ -57,7 +66,7 @@ class AsyncDGDServer:
         non-serializable step_size fn (and may change r/rule — elastic)."""
         e = AsyncEngine(self._mk["grad_fn"], snap["x"], cfg,
                         self._mk["latency"], self._mk["loss_fn"],
-                        self._mk["x_star"])
+                        self._mk["x_star"], transport=self._mk["transport"])
         e.t = snap["t"]
         e.clock = snap["clock"]
         e._ledger_ts = snap["ledger_ts"].copy()
@@ -68,6 +77,8 @@ class AsyncDGDServer:
         e.rng.bit_generator.state = snap["rng_state"]
         if "hist" in snap:              # older snapshots carry no history
             e.hist = _copy_hist(snap["hist"])
+        if snap.get("transport"):
+            e.transport.load_state(snap["transport"])
         self.engine = e
 
     # -- elastic reconfiguration ----------------------------------------

@@ -28,7 +28,8 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.async_engine import LatencyModel, default_latency
+from repro.core.async_engine import (DefaultTransport, LatencyModel,
+                                     Transport, default_latency)
 from repro.core.byzantine import ATTACKS
 
 
@@ -56,6 +57,19 @@ class DispatchResult:
     round_latency: float                # arrival time of the last used reply
     used: Tuple[int, ...]               # replica ids that made S
     n_received: int
+    # DispatchConfig validates the honest-majority bound for the FULL
+    # n-r quorum, but crashes can degrade the used set below it at run
+    # time — when False, the voted tokens are NOT trustworthy
+    quorum_honest: bool = True
+
+
+def honest_majority(n_used: int, n_byz: int) -> bool:
+    """Vote soundness predicate (eq. (18) at the serving layer): the used
+    reply set keeps a STRICT honest majority — a tie is not sound because
+    ``_majority_vote`` breaks ties toward the smallest token, which an
+    adversary can craft. The single source of truth for dispatch's
+    ``quorum_honest`` and the sim harness's vote check."""
+    return (n_used - n_byz) > n_used / 2
 
 
 def _majority_vote(streams: np.ndarray) -> np.ndarray:
@@ -76,20 +90,36 @@ class RedundantDispatcher:
 
     def __init__(self, replica_fn: Callable[[int, np.ndarray], np.ndarray],
                  cfg: DispatchConfig,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 transport: Optional[Transport] = None):
         self.replica_fn = replica_fn
         self.cfg = cfg
-        self.lat = latency or default_latency(cfg.n_replicas)
+        # same event-ordering seam as the training engine: latency draws,
+        # liveness and drops all come from the (injectable) transport, so
+        # one repro.sim Scenario drives both stacks through one fault model
+        self.transport = transport or DefaultTransport(
+            latency or default_latency(cfg.n_replicas))
         self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0                      # virtual wall clock of the fleet
 
     def dispatch(self, request: np.ndarray,
                  wait_for_all: bool = False) -> DispatchResult:
         c = self.cfg
-        lat = self.lat.sample(self.rng)
+        lat = np.asarray(self.transport.round_latencies(self.now, self.rng),
+                         float)
+        alive = np.array([self.transport.alive(j, self.now)
+                          for j in range(c.n_replicas)])
         order_key = lat.copy()
         for j in c.byz_ids:                 # adversarial worst case: first
             order_key[j] = 0.0
+        order_key[~alive] = np.inf
+        # inf = unreachable this round (crashed replica / dropped reply);
+        # degrade elastically like the training engine's S^t
+        deliverable = int(np.isfinite(order_key).sum())
         wait = c.n_replicas if wait_for_all else c.n_replicas - c.r
+        wait = min(wait, deliverable)
+        if wait == 0:
+            raise RuntimeError("no live replica reachable — request lost")
         chosen = np.argsort(order_key)[:wait]
 
         streams = []
@@ -100,10 +130,15 @@ class RedundantDispatcher:
                 toks = np.abs(np.rint(g)).astype(np.int64)
             streams.append(toks)
         tokens = _majority_vote(np.stack(streams)).astype(np.int32)
+        round_latency = float(np.max(order_key[chosen]))
+        self.now += round_latency
+        n_byz_used = len({int(j) for j in chosen} & set(c.byz_ids))
         return DispatchResult(tokens=tokens,
-                              round_latency=float(np.max(order_key[chosen])),
+                              round_latency=round_latency,
                               used=tuple(int(j) for j in np.sort(chosen)),
-                              n_received=wait)
+                              n_received=wait,
+                              quorum_honest=honest_majority(wait,
+                                                            n_byz_used))
 
     def serve(self, requests: Sequence[np.ndarray],
               wait_for_all: bool = False):
@@ -117,7 +152,18 @@ class RedundantDispatcher:
 
     def reseed(self) -> None:
         self.rng = np.random.default_rng(self.cfg.seed)
+        self.now = 0.0
+        self.transport.reset()
 
 
 def tail_latency(lats: np.ndarray, q: float = 99.0) -> float:
     return float(np.percentile(lats, q))
+
+
+def honest_tokens(request: np.ndarray, length: int = 12) -> np.ndarray:
+    """The canonical deterministic 'greedy model' stand-in every honest
+    replica runs in tests, benchmarks and the sim conformance harness:
+    the response depends only on the request, never on the replica id,
+    so token parity means the same thing at every layer."""
+    rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
+    return rng.integers(0, 256, length).astype(np.int32)

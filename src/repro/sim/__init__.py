@@ -1,0 +1,32 @@
+"""repro.sim — deterministic fault-injection cluster simulator.
+
+Virtual-clock, event-driven scenario engine (DESIGN.md §10) that drives
+both the training stack (``core.async_engine`` fresh+stale) and the
+serving stack (``serve.dispatch``) through one shared fault model:
+
+- :mod:`repro.sim.clock` — virtual time + seeded event heap (no
+  wall-clock anywhere).
+- :mod:`repro.sim.faults` — composable fault schedules (crash/recover
+  windows, straggler ramps, message drop/duplicate/reorder, mid-run
+  Byzantine switches, elastic churn) and the :class:`SimTransport` that
+  injects them through the ``core.async_engine.Transport`` seam.
+- :mod:`repro.sim.scenario` — declarative :class:`Scenario` spec, the
+  named-scenario registry, and the train/serve runners.
+- :mod:`repro.sim.conformance` — paper-bound checks (Theorem-2 error
+  envelope via ``core.redundancy``, §3.2 T-set invariants, liveness).
+- :mod:`repro.sim.golden` — golden-trace record/replay so behavioral
+  drift in the engine or the dispatcher diffs against committed traces.
+"""
+from repro.sim.clock import EventHeap, VirtualClock
+from repro.sim.faults import (ByzantineSwitch, ChurnEvent, CrashWindow,
+                              FaultSchedule, MessageFaults, SimTransport,
+                              StragglerRamp)
+from repro.sim.scenario import (SCENARIOS, Scenario, get_scenario, run_serve,
+                                run_train)
+
+__all__ = [
+    "EventHeap", "VirtualClock",
+    "CrashWindow", "StragglerRamp", "MessageFaults", "ByzantineSwitch",
+    "ChurnEvent", "FaultSchedule", "SimTransport",
+    "Scenario", "SCENARIOS", "get_scenario", "run_train", "run_serve",
+]

@@ -70,6 +70,31 @@ def test_crash_tolerated_within_r():
     assert h.dist[-1] < 0.1
 
 
+def test_stale_wall_clock_tracks_event_time():
+    """Regression: step_stale used to advance the clock in the event loop
+    AND again in _record, running the wall clock at 2x event time — which
+    races it past in-flight completion times and halves the effective
+    depth of any wall-clock fault window."""
+    eng = _mk(_cfg(r=2, mode="stale", tau=3))
+    eng.run(50)
+    working = eng._working_on >= 0
+    assert working.any()
+    # no in-flight task may lie in the past of the advanced clock
+    assert (eng._busy_until[working] >= eng.clock - 1e-9).all()
+    assert eng.clock == pytest.approx(eng.hist.wall[-1])
+
+
+def test_stale_crash_loses_in_flight_work():
+    """CrashWindow contract: an agent dead at delivery time loses its
+    in-flight upload — it must never land in the ledger."""
+    cfg = _cfg(r=2, mode="stale", tau=3, crashes=((0, 0.2, 1e9),))
+    eng = _mk(cfg)
+    eng.run(30)
+    # assigned at clock 0, dead from t=0.2 < any completion time: the
+    # upload is lost and agent 0 is never reassigned
+    assert eng._ledger_ts[0] == -1
+
+
 def test_byzantine_first_arrival_worst_case():
     """Byzantine agents always arrive first; sum rule gets corrupted."""
     eng = _mk(_cfg(r=2, byz_ids=(1,), attack="large_norm", rule="sum"))

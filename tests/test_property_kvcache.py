@@ -1,0 +1,80 @@
+"""Property-based alloc/free fuzz (hypothesis / in-tree stub) for
+serve.kv_cache.PageAllocator: under ANY interleaving of allocations and
+frees — no leak, no double-hand-out, the null page 0 is never allocated,
+and freeing anything not held raises instead of corrupting the pool."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.kv_cache import PageAllocator
+
+# an op sequence: each element allocates k pages (k>0) or frees the
+# h-th oldest held block (encoded as negative); sized to sometimes
+# exhaust a small pool
+ops = st.tuples(
+    st.integers(4, 24),                           # num_pages
+    st.lists(st.integers(-8, 6), min_size=1, max_size=60))
+
+
+@settings(max_examples=150)
+@given(ops)
+def test_alloc_free_fuzz_no_leak_no_double_handout(case):
+    num_pages, seq = case
+    alloc = PageAllocator(num_pages)
+    held = []                                     # list of page-lists
+    outstanding = set()
+    for op in seq:
+        if op > 0:
+            try:
+                pages = alloc.alloc(op)
+            except MemoryError:
+                assert op > alloc.n_free          # only fails when short
+                continue
+            assert len(pages) == op
+            assert 0 not in pages                 # null page never leaves
+            assert not (set(pages) & outstanding)  # never handed out twice
+            outstanding.update(pages)
+            held.append(pages)
+        elif held:
+            pages = held.pop(abs(op) % len(held))
+            alloc.free(pages)
+            outstanding.difference_update(pages)
+        assert alloc.check_invariants()
+        assert alloc.n_used == len(outstanding)
+        assert alloc.n_free + alloc.n_used == num_pages - 1
+    for pages in held:                            # drain: no leak
+        alloc.free(pages)
+    assert alloc.n_free == num_pages - 1
+    assert alloc.n_used == 0
+
+
+@settings(max_examples=80)
+@given(st.integers(4, 24), st.integers(1, 6))
+def test_double_free_always_raises(num_pages, k):
+    alloc = PageAllocator(num_pages)
+    k = min(k, alloc.n_free)
+    pages = alloc.alloc(k)
+    alloc.free(pages)
+    with pytest.raises(ValueError):
+        alloc.free(pages[:1])                     # double free
+    assert alloc.check_invariants()
+
+
+@settings(max_examples=80)
+@given(st.integers(4, 24))
+def test_foreign_and_null_page_free_rejected(num_pages):
+    alloc = PageAllocator(num_pages)
+    with pytest.raises(ValueError):
+        alloc.free([0])                           # the reserved null page
+    with pytest.raises(ValueError):
+        alloc.free([num_pages - 1])               # free page, never allocated
+    assert alloc.check_invariants()
+
+
+def test_exhaustion_is_clean():
+    alloc = PageAllocator(5)
+    got = alloc.alloc(4)
+    with pytest.raises(MemoryError):
+        alloc.alloc(1)
+    alloc.free(got)
+    assert alloc.n_free == 4 and alloc.check_invariants()

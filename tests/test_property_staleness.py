@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis / in-tree stub) for the §3.2 T-set
+bookkeeping: for ANY ledger, partition_T yields disjoint T^{t;t-i} sets
+whose union has size <= n, contains exactly the agents with age in
+[0, tau], and never contains an agent with no delivered gradient."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.staleness import check_invariants, partition_T, t_set_size
+
+# a ledger: n agents, each -1 (nothing delivered) or a timestamp <= t
+ledgers = st.integers(1, 16).flatmap(lambda n: st.tuples(
+    st.just(n),
+    st.lists(st.integers(-1, 40), min_size=n, max_size=n),
+    st.integers(0, 40),          # current iteration t (clamped below)
+    st.integers(0, 8)))          # tau
+
+
+def _normalize(n, raw, t, tau):
+    """Ledger entries can never exceed the current iteration."""
+    ts = np.minimum(np.asarray(raw, np.int64), t)
+    return n, ts, t, tau
+
+
+@settings(max_examples=200)
+@given(ledgers)
+def test_partition_disjoint_and_bounded(case):
+    n, ts, t, tau = _normalize(*case)
+    parts = partition_T(ts, t, tau)
+    assert check_invariants(parts)               # pairwise disjoint
+    assert set(parts.keys()) == set(range(tau + 1))
+    assert t_set_size(parts) <= n
+
+
+@settings(max_examples=200)
+@given(ledgers)
+def test_partition_membership_is_exactly_age_in_bounds(case):
+    n, ts, t, tau = _normalize(*case)
+    parts = partition_T(ts, t, tau)
+    member = {j for agents in parts.values() for j in agents}
+    expected = {j for j in range(n)
+                if ts[j] >= 0 and 0 <= t - int(ts[j]) <= tau}
+    assert member == expected                    # no ghosts, no misses
+    for age, agents in parts.items():
+        for j in agents:
+            assert t - int(ts[j]) == age         # filed under its true age
+
+
+@settings(max_examples=100)
+@given(ledgers)
+def test_partition_monotone_in_tau(case):
+    """Raising tau can only ADD agents (T^t is a union over ages)."""
+    n, ts, t, tau = _normalize(*case)
+    small = t_set_size(partition_T(ts, t, tau))
+    large = t_set_size(partition_T(ts, t, tau + 3))
+    assert small <= large
+
+
+@settings(max_examples=100)
+@given(ledgers)
+def test_partition_from_live_engine_shape(case):
+    """The engine calls partition_T with its live ledger every stale
+    step; the returned structure must always be safely iterable — ages
+    contiguous from 0, lists of ints."""
+    n, ts, t, tau = _normalize(*case)
+    parts = partition_T(ts, t, tau)
+    assert sorted(parts) == list(range(tau + 1))
+    assert all(isinstance(j, (int, np.integer))
+               for agents in parts.values() for j in agents)

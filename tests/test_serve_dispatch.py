@@ -5,18 +5,19 @@ Algorithm 1's waiting rule to inference)."""
 import numpy as np
 import pytest
 
-from repro.core.async_engine import default_latency
+from repro.core.async_engine import LatencyModel, default_latency
 from repro.serve.dispatch import (DispatchConfig, RedundantDispatcher,
-                                  tail_latency)
+                                  honest_tokens, tail_latency)
+from repro.sim.faults import CrashWindow, FaultSchedule, SimTransport
 
 N = 10
 
 
 def _replica_fn(j, request):
     """Deterministic stand-in for 'replicas of the same greedy model':
-    the response depends only on the request, never on the replica."""
-    rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
-    return rng.integers(0, 256, 12).astype(np.int32)
+    the response depends only on the request, never on the replica —
+    the canonical helper shared with the benchmark and the sim harness."""
+    return honest_tokens(request)
 
 
 def _requests(n, seed=0):
@@ -80,6 +81,27 @@ def test_quorum_validation():
         # 2 byzantine of a 3-reply quorum: vote can be outvoted
         DispatchConfig(n_replicas=5, r=2, byz_ids=(0, 1),
                        attack="sign_flip")
+
+
+def test_degraded_quorum_flags_untrustworthy_vote():
+    """DispatchConfig validates the honest-majority bound for the full
+    n-r quorum, but crashes can shrink the used set below it at run time:
+    the result must carry quorum_honest=False so the caller never trusts
+    a vote the adversary could have won."""
+    cfg = DispatchConfig(n_replicas=8, r=3, byz_ids=(0, 1), attack="zero",
+                         seed=3)                 # 2 byz < majority of 5: ok
+    transport = SimTransport(
+        8, FaultSchedule(crashes=tuple(
+            CrashWindow(agent=k, start=0.0, end=1e9) for k in (4, 5, 6, 7))),
+        LatencyModel(n_agents=8), seed=3)
+    d = RedundantDispatcher(_replica_fn, cfg, transport=transport)
+    res = d.dispatch(_requests(1)[0])
+    assert res.n_received == 4                   # degraded below the quorum
+    assert not res.quorum_honest                 # 2 byz of 4: tie-able vote
+    # healthy fleet under the same config: the flag stays true
+    d2 = RedundantDispatcher(_replica_fn, cfg,
+                             latency=default_latency(8, 2, 8.0, seed=1))
+    assert d2.dispatch(_requests(1)[0]).quorum_honest
 
 
 def test_dispatch_uses_exactly_n_minus_r():

@@ -1,0 +1,122 @@
+"""Virtual clock, seeded event heap, fault schedules and the SimTransport
+seam: deterministic ordering, fault-window queries, message-fault
+telemetry, and snapshot/restore of transport state."""
+import numpy as np
+import pytest
+
+from repro.core.async_engine import LatencyModel
+from repro.sim.clock import EventHeap, VirtualClock, poisson_arrivals
+from repro.sim.faults import (ByzantineSwitch, ChurnEvent, CrashWindow,
+                              FaultSchedule, MessageFaults, SimTransport,
+                              StragglerRamp)
+
+
+def test_event_heap_orders_by_time_then_insertion():
+    h = EventHeap()
+    h.push(2.0, "b")
+    h.push(1.0, "a")
+    h.push(1.0, "a2")            # same time: insertion order breaks the tie
+    h.push(3.0, "c")
+    assert [h.pop().tag for _ in range(4)] == ["a", "a2", "b", "c"]
+
+
+def test_pop_due_and_advance():
+    c = VirtualClock()
+    c.schedule_at(5.0, "x")
+    c.schedule_at(1.0, "y")
+    c.schedule_in(2.0, "z")      # at now=0 -> t=2
+    due = c.advance_to(3.0)
+    assert [e.tag for e in due] == ["y", "z"]
+    assert c.now == 3.0
+    assert c.advance_to(1.0) == []          # time never goes backwards
+    assert c.now == 3.0
+    ev = c.next_event()
+    assert ev.tag == "x" and c.now == 5.0
+    assert c.next_event() is None
+
+
+def test_poisson_arrivals_deterministic():
+    a = VirtualClock()
+    b = VirtualClock()
+    ta = [e.time for e in poisson_arrivals(a, 0.5, 20, seed=3)]
+    tb = [e.time for e in poisson_arrivals(b, 0.5, 20, seed=3)]
+    assert ta == tb
+    assert all(t2 > t1 for t1, t2 in zip(ta, ta[1:]))
+    tc = [e.time for e in poisson_arrivals(VirtualClock(), 0.5, 20, seed=4)]
+    assert tc != ta
+
+
+def test_crash_window_and_ramp_queries():
+    sched = FaultSchedule(
+        crashes=(CrashWindow(agent=1, start=5.0, end=10.0),),
+        ramps=(StragglerRamp(agents=(2,), start=0.0, end=10.0, factor=5.0),))
+    assert sched.alive(1, 4.9) and not sched.alive(1, 5.0)
+    assert not sched.alive(1, 9.9) and sched.alive(1, 10.0)
+    assert sched.alive(0, 7.0)                      # others unaffected
+    assert sched.lat_multiplier(2, 0.0) == 1.0      # ramp starts at 1
+    assert sched.lat_multiplier(2, 5.0) == pytest.approx(3.0)
+    assert sched.lat_multiplier(2, 10.0) == 1.0     # recovered after window
+    assert sched.lat_multiplier(0, 5.0) == 1.0
+
+
+def test_control_events_sorted_and_validated():
+    sched = FaultSchedule(
+        switches=(ByzantineSwitch(at=20.0, byz_ids=(1,), attack="zero"),),
+        churn=(ChurnEvent(at=10.0, changes=(("r", 2),)),))
+    evs = sched.control_events()
+    assert [(t, k) for t, k, _ in evs] == [(10.0, "churn"), (20.0, "switch")]
+    with pytest.raises(ValueError):
+        ByzantineSwitch(at=0.0, byz_ids=(0,), attack="not_an_attack")
+
+
+def test_sim_transport_ignores_caller_rng():
+    """Event ordering must not depend on how much entropy the driven
+    stack consumes: two transports fed *different* caller rngs draw
+    identical latencies."""
+    t1 = SimTransport(4, FaultSchedule(), LatencyModel(n_agents=4), seed=9)
+    t2 = SimTransport(4, FaultSchedule(), LatencyModel(n_agents=4), seed=9)
+    caller_a = np.random.default_rng(0)
+    caller_b = np.random.default_rng(12345)
+    caller_b.normal(size=100)               # desynchronize the callers
+    np.testing.assert_array_equal(t1.round_latencies(0.0, caller_a),
+                                  t2.round_latencies(0.0, caller_b))
+    assert t1.task_latency(2, 1.0, caller_a) == \
+        t2.task_latency(2, 1.0, caller_b)
+
+
+def test_sim_transport_drop_dup_telemetry():
+    t = SimTransport(8, FaultSchedule(messages=MessageFaults(
+        drop_p=0.3, dup_p=0.3)), LatencyModel(n_agents=8), seed=1)
+    fates = [t.delivery_fate(0, 0.0, None) for _ in range(500)]
+    assert t.drops == fates.count(0) > 50
+    assert t.dups == fates.count(2) > 50
+    lat = t.round_latencies(0.0, None)
+    assert np.isinf(lat).sum() >= 1         # fresh-mode drops are inf
+
+
+def test_sim_transport_state_roundtrip():
+    t = SimTransport(4, FaultSchedule(messages=MessageFaults(drop_p=0.2)),
+                     LatencyModel(n_agents=4), seed=2)
+    t.round_latencies(0.0, None)
+    state = t.state_dict()
+    a = t.round_latencies(1.0, None)
+    fate_a = [t.delivery_fate(0, 1.0, None) for _ in range(20)]
+    t.load_state(state)
+    b = t.round_latencies(1.0, None)
+    fate_b = [t.delivery_fate(0, 1.0, None) for _ in range(20)]
+    np.testing.assert_array_equal(a, b)
+    assert fate_a == fate_b
+
+
+def test_reorder_jitter_permutes_completion_order():
+    base = SimTransport(6, FaultSchedule(), LatencyModel(n_agents=6),
+                        seed=3)
+    jit = SimTransport(6, FaultSchedule(messages=MessageFaults(
+        reorder_jitter=1.5)), LatencyModel(n_agents=6), seed=3)
+    orders = set()
+    for _ in range(20):
+        orders.add(tuple(np.argsort(jit.round_latencies(0.0, None))))
+    baseline = {tuple(np.argsort(base.round_latencies(0.0, None)))
+                for _ in range(20)}
+    assert len(orders) > 1                   # jitter actually reorders
+    assert orders != baseline

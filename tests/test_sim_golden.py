@@ -1,0 +1,62 @@
+"""Golden-trace replay: re-run every registered scenario and diff the
+bit-exact (hexfloat) trace against the committed one — ANY behavioral
+drift in the engine, the dispatcher, the transport or the scenario specs
+fails here and names the first diverging step."""
+import copy
+import json
+
+import pytest
+
+from repro.sim import golden
+from repro.sim.scenario import SCENARIOS
+
+ALL = sorted(SCENARIOS)
+
+
+def test_every_registered_scenario_has_a_committed_trace():
+    missing = [n for n in ALL if not golden.trace_path(n).exists()]
+    assert missing == [], (
+        f"record them: python -m repro.sim.golden --record {missing}")
+
+
+@pytest.mark.timeout(540)
+@pytest.mark.parametrize("name", ALL)
+def test_golden_replay_matches(name):
+    mismatches = golden.verify([name])[name]
+    assert mismatches == [], (
+        "behavioral drift vs committed trace (if intended, re-record via "
+        "python -m repro.sim.golden --record and review the diff):\n  "
+        + "\n  ".join(mismatches))
+
+
+def test_diff_detects_tampered_step_and_digest():
+    """The differ must localize a changed stored step AND catch drift in
+    unstored steps via the whole-run digest."""
+    name = golden.SMOKE_SCENARIOS[0]
+    committed = golden.load_trace(name)
+    fresh = golden.build_trace(name)
+
+    tampered = copy.deepcopy(fresh)
+    tampered["train"]["steps"][3]["n_rx"] += 1
+    diffs = golden.diff_traces(committed, tampered)
+    assert any("stored step 3" in d for d in diffs)
+
+    tampered = copy.deepcopy(fresh)
+    tampered["train"]["digest"] = "0" * 64
+    diffs = golden.diff_traces(committed, tampered)
+    assert any("train.digest" in d for d in diffs)
+
+
+def test_golden_files_are_hexfloat_encoded():
+    """Traces must stay bit-exact across JSON round-trips: every float
+    field is serialized as float.hex(), never as a decimal repr."""
+    trace = json.loads(golden.trace_path(ALL[0]).read_text())
+    step = trace["train"]["steps"][0]
+    for key in ("comm", "loss", "dist"):
+        assert isinstance(step[key], str) and "0x" in step[key]
+        float.fromhex(step[key])             # round-trips
+
+
+def test_smoke_subset_is_registered():
+    for name in golden.SMOKE_SCENARIOS:
+        assert name in SCENARIOS

@@ -1,0 +1,161 @@
+"""Scenario registry + conformance harness: every named scenario runs
+through BOTH stacks (train engine and serve dispatch) against the paper-
+bound checks — §3.2 T-set invariants at every stale step, liveness with
+>= n-r live agents, and the Theorem-2 error-vs-(r, eps) envelope from
+``core.redundancy``."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.sim import conformance
+from repro.sim.scenario import (SCENARIOS, Scenario, get_scenario,
+                                run_serve, run_train)
+
+ALL = sorted(SCENARIOS)
+
+
+def test_registry_has_at_least_eight_named_scenarios():
+    assert len(SCENARIOS) >= 8
+    for required in ("flash_crowd", "rolling_restart", "partition_heal",
+                     "byzantine_flip_midrun"):
+        assert required in SCENARIOS
+    with pytest.raises(KeyError):
+        get_scenario("definitely_not_registered")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_conformance(name):
+    """Train stack: no conformance violation in any named scenario."""
+    rep = run_train(get_scenario(name))
+    assert rep.violations == [], conformance.summarize(rep.violations)
+    assert len(rep.trace) == rep.scenario.iters
+    # the envelope itself is meaningful (alpha > 0 -> Theorem 1 applies)
+    assert rep.envelope.alpha > 0
+    assert np.isfinite(rep.hist.wall[-1])
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_serve_conformance(name):
+    """Serve stack: same Scenario, same fault model, no violations."""
+    sc = get_scenario(name)
+    rep = run_serve(sc)
+    assert rep.violations == [], conformance.summarize(rep.violations)
+    assert len(rep.trace) == sc.n_requests
+    assert np.isfinite(rep.latencies).all()
+
+
+def test_same_scenario_object_drives_both_stacks():
+    """Acceptance: one Scenario value feeds run_train AND run_serve, and
+    the injected fault model demonstrably acts on both sides."""
+    sc = get_scenario("message_chaos")
+    rt = run_train(sc)
+    assert rt.transport.drops > 0            # stale-mode upload drops
+    rs = run_serve(sc)
+    assert rs.transport.drops > 0            # fresh-round reply drops
+    # distinct transport instances, same seed, same schedule object
+    assert rt.transport is not rs.transport
+    assert rt.transport.sched is sc.faults is rs.transport.sched
+
+
+def test_crash_scenarios_actually_degrade():
+    """partition_heal must really lose half the fleet: some steps run
+    with S^t below n-r (elastic degrade), then recover after the heal."""
+    rep = run_train(get_scenario("partition_heal"))
+    sc = rep.scenario
+    n_rx = [s["n_rx"] for s in rep.trace]
+    assert min(n_rx) <= sc.n_agents - sc.r - 1   # degraded mid-partition
+    assert n_rx[-1] == sc.n_agents - sc.r        # healed at the end
+
+
+def test_byzantine_flip_switches_are_applied():
+    rep = run_train(get_scenario("byzantine_flip_midrun"))
+    eng = rep.server.engine
+    assert eng.cfg.attack == "large_norm"        # last switch landed
+    assert eng.cfg.byz_ids == (0, 5)
+
+
+def test_churn_elastic_history_monotone():
+    rep = run_train(get_scenario("churn_elastic"))
+    assert rep.server.engine.cfg.r == 1          # final churn applied
+    rs = [s["r"] for s in rep.trace]
+    assert set(rs) == {0, 3, 1}                  # all three regimes ran
+    wall = np.asarray(rep.hist.wall)
+    assert (np.diff(wall) >= 0).all()            # clock never rewinds
+    assert len(rep.hist.loss) == rep.scenario.iters
+
+
+def test_stale_storm_stragglers_age_out():
+    rep = run_train(get_scenario("stale_storm"))
+    sc = rep.scenario
+    ages = [s["stale"] for s in rep.trace]
+    assert max(ages) <= sc.tau                   # tau honored throughout
+    assert max(ages) > 0                         # staleness actually occurs
+
+
+@pytest.mark.timeout(300)
+def test_envelope_linear_in_r_sweep():
+    """Theorem 2's discussion: the certified eps and the error ball both
+    grow with r; the realized plateau error stays inside each envelope.
+    (Slow sweep: 3 full runs.)"""
+    base = get_scenario("steady_state")
+    radii, finals = [], []
+    for r in (1, 2, 3):
+        sc = dataclasses.replace(base, name=f"sweep_r{r}", r=r)
+        rep = run_train(sc)
+        assert rep.violations == [], conformance.summarize(rep.violations)
+        radii.append(rep.envelope.radius(sc.expect.envelope_slack))
+        finals.append(rep.hist.dist[-1])
+    assert radii[0] <= radii[1] <= radii[2]      # envelope monotone in r
+    assert all(f <= rad for f, rad in zip(finals, radii))
+
+
+def test_aggregation_age_check_is_falsifiable():
+    """The rule-(15) gate must be engine-coupled: feed it the recorded
+    max_age a broken staleness filter would produce (tau + 1) and it
+    fires — unlike re-derived partition checks, which hold for any
+    ledger by construction."""
+    assert conformance.check_aggregation_ages(0.0, 3, t=5) is None
+    assert conformance.check_aggregation_ages(3.0, 3, t=5) is None
+    v = conformance.check_aggregation_ages(4.0, 3, t=5)
+    assert v is not None and "rule (15)" in v
+    # and the live engine's recorded max_age feeds it at every step
+    rep = run_train(get_scenario("stale_storm"))
+    assert len(rep.hist.max_age) == rep.scenario.iters
+    assert max(rep.hist.max_age) <= rep.scenario.tau
+
+
+def test_fresh_mode_drops_do_not_false_positive_liveness():
+    """An alive agent whose upload the network dropped is correctly
+    excluded from S^t — the liveness check must account for the step's
+    drops instead of flagging the elastic degrade as a violation."""
+    from repro.sim.faults import FaultSchedule, MessageFaults
+    sc = dataclasses.replace(
+        get_scenario("steady_state"), name="fresh_drops",
+        faults=FaultSchedule(messages=MessageFaults(drop_p=0.12)))
+    rep = run_train(sc)
+    assert rep.transport.drops > 0               # drops really happened
+    assert rep.violations == [], conformance.summarize(rep.violations)
+
+
+def test_total_outage_is_a_violation_not_a_crash():
+    """Crashing the whole fleet mid-workload must surface as recorded
+    conformance violations (one per lost request), never a traceback."""
+    from repro.sim.faults import CrashWindow, FaultSchedule
+    sc = dataclasses.replace(
+        get_scenario("steady_state"), name="total_outage",
+        faults=FaultSchedule(crashes=tuple(
+            CrashWindow(agent=k, start=0.0, end=1e12) for k in range(8))))
+    rep = run_serve(sc)                          # must not raise
+    assert len(rep.violations) >= sc.n_requests  # every request lost
+    assert all("no live replica" in v for v in rep.violations[:3])
+    assert len(rep.trace) == sc.n_requests       # trace stays aligned
+
+
+def test_fresh_and_stale_modes_share_the_seam():
+    """The same transport class drives fresh and stale engines — flip the
+    mode on one scenario and both still conform."""
+    sc = dataclasses.replace(get_scenario("steady_state"),
+                             name="steady_stale", mode="stale", tau=3)
+    rep = run_train(sc)
+    assert rep.violations == [], conformance.summarize(rep.violations)
