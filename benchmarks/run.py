@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   redundancy_tradeoff  Definition 1 (overlap -> eps -> error)
   roofline             §Roofline terms from the dry-run artifacts
   serve_latency        first-(n-r) dispatch p99 vs r + paged-engine tok/s
+  agg_throughput       GradAgg host-vs-fused-device iteration (BENCH_agg)
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: comm_time,staleness,byzantine,"
-                         "redundancy,roofline,serve")
+                         "redundancy,roofline,serve,agg")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     args = ap.parse_args()
@@ -56,6 +57,10 @@ def main() -> None:
     from benchmarks import serve_latency
     go("serve", (lambda: serve_latency.main(200, 3)) if args.fast
        else serve_latency.main)
+
+    from benchmarks import agg_throughput
+    go("agg", (lambda: agg_throughput.main(smoke=True)) if args.fast
+       else agg_throughput.main)
 
 
 if __name__ == "__main__":

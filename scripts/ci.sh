@@ -14,6 +14,10 @@
 #          scenarios against the T-set/liveness/Theorem-2 checks, property
 #          fuzz, determinism) plus a golden-trace smoke replay that fails
 #          on any behavioral drift vs the committed traces.
+# Stage 6: device aggregation path — the GradAgg Pallas kernels against
+#          their gradagg oracles in interpret mode + the GradLedger
+#          determinism suite, then the aggregation-throughput benchmark
+#          smoke (host reference vs fused jitted path end to end).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,5 +40,10 @@ echo "== stage 5: scenario conformance + golden-trace replay =="
 # gate a scenario-touching PR can run without the full fast suite
 python -m pytest -q tests/test_sim_*.py tests/test_property_*.py
 PYTHONPATH=src python -m repro.sim.golden --smoke
+
+echo "== stage 6: aggregation kernels + throughput (smoke) =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_agg.py \
+    tests/test_gradledger.py
+JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/agg_throughput.py --smoke
 
 echo "CI OK"

@@ -158,6 +158,10 @@ class EngineConfig:
     step_size: Callable[[int], float] = lambda t: 0.01
     proj_gamma: float = 1e6           # radius of W (L2 ball)
     wire_dtype: str = "float32"       # on-the-wire element format
+    # "host" = the f64 numpy reference pipeline (the conformance/golden
+    # bit stream); "device" = resident f32 GradLedger + one fused jitted
+    # rule->step->project dispatch per iteration (DESIGN.md §11)
+    agg_backend: str = "host"
     seed: int = 0
     # crash windows: (agent, t_start, t_end) in wall-clock time
     crashes: Tuple[Tuple[int, float, float], ...] = ()
@@ -211,9 +215,27 @@ class AsyncEngine:
         # stale-mode state
         self._x_hist: Dict[int, np.ndarray] = {}
         self._ledger_ts = np.full(cfg.n_agents, -1, np.int64)
-        self._ledger_g = np.zeros((cfg.n_agents, x0.size))
         self._busy_until = np.zeros(cfg.n_agents)
         self._working_on = np.full(cfg.n_agents, -1, np.int64)
+        # gradient ledger: host f64 matrix (reference), or a resident f32
+        # device buffer + fused aggregate step (opt-in fast path). The
+        # host branch keeps an empty matrix in device mode so shape-based
+        # code never sees None.
+        if cfg.agg_backend not in ("host", "device"):
+            raise ValueError(
+                f"unknown agg_backend {cfg.agg_backend!r}; "
+                "expected 'host' or 'device'")
+        self._dev = None
+        if cfg.agg_backend == "device":
+            import jax.numpy as jnp
+            from repro.core.ledger import GradLedger, make_aggregate_apply
+            self._jnp = jnp
+            self._dev = GradLedger(cfg.n_agents, x0.size)
+            self._dev_x = jnp.asarray(self.x, jnp.float32)
+            self._agg_apply = make_aggregate_apply(cfg.rule, cfg.f,
+                                                   cfg.proj_gamma)
+        self._ledger_g = np.zeros(
+            (cfg.n_agents, 0 if self._dev is not None else x0.size))
 
     # ------------------------------------------------------------------
     def _alive(self, j: int, now: float) -> bool:
@@ -228,6 +250,30 @@ class AsyncEngine:
     def _apply(self, agg: np.ndarray, eta: float) -> None:
         self.x = gradagg.project_ball(
             np.asarray(self.x - eta * agg), self.cfg.proj_gamma)
+
+    def _device_step(self, received: np.ndarray, eta: float) -> None:
+        """The fused device iteration: rule -> step -> projection in one
+        jitted dispatch over the resident ledger; ``self.x`` stays a host
+        f64 mirror (exact f32 values) for grad_fn / loss / accounting."""
+        jnp = self._jnp
+        self._dev_x = self._agg_apply(self._dev_x, self._dev.data,
+                                      jnp.asarray(received), float(eta))
+        self.x = np.asarray(self._dev_x).astype(np.float64)
+
+    # -- ledger snapshot seam (server checkpoints) ---------------------
+    def ledger_host(self) -> np.ndarray:
+        """Snapshot form of the gradient ledger: the host f64 reference
+        matrix, or the device buffer pulled back as f32 (either restores
+        bit-exactly for its own backend)."""
+        if self._dev is not None:
+            return self._dev.host()
+        return self._ledger_g.copy()
+
+    def load_ledger(self, arr: np.ndarray) -> None:
+        if self._dev is not None:
+            self._dev.load(arr)
+        else:
+            self._ledger_g = np.array(arr, np.float64, copy=True)
 
     def _record(self, round_time: float, mean_age: float = 0.0,
                 n_rx: int = 0, n_bcast: Optional[int] = None,
@@ -283,11 +329,20 @@ class AsyncEngine:
         received[chosen] = True
         round_time = float(np.max(order_key[chosen])) if wait_for else 0.0
 
-        g = np.zeros((c.n_agents, self.x.size))
-        for j in np.nonzero(received)[0]:
-            g[j] = self._send(j, self.x)
-        agg = self.rule(np.asarray(g, np.float64), received)
-        self._apply(np.asarray(agg), c.step_size(self.t))
+        if self._dev is None:
+            g = np.zeros((c.n_agents, self.x.size))
+            for j in np.nonzero(received)[0]:
+                g[j] = self._send(j, self.x)
+            agg = self.rule(np.asarray(g, np.float64), received)
+            self._apply(np.asarray(agg), c.step_size(self.t))
+        else:
+            # uploads scatter straight into the resident ledger (stale
+            # rows in non-received slots are masked out by every rule)
+            idx = np.nonzero(received)[0]
+            if idx.size:
+                self._dev.upload(idx, np.stack(
+                    [self._send(j, self.x) for j in idx]))
+            self._device_step(received, c.step_size(self.t))
         self.t += 1
         self._record(round_time, 0.0, wait_for, n_bcast=n_alive)
 
@@ -332,7 +387,11 @@ class AsyncEngine:
             if xs is not None and alive_now:
                 copies = self.transport.delivery_fate(jn, now, self.rng)
                 if copies > 0:
-                    self._ledger_g[jn] = self._send(jn, xs)
+                    g_up = self._send(jn, xs)
+                    if self._dev is None:
+                        self._ledger_g[jn] = g_up
+                    else:
+                        self._dev.upload_row(jn, g_up)
                     self._ledger_ts[jn] = ts
                     rx_extra += copies - 1
             if alive_now:
@@ -346,9 +405,13 @@ class AsyncEngine:
                 break
 
         received = self._ledger_ts >= t - c.tau
-        agg = self.rule(np.asarray(self._ledger_g, np.float64), received)
         ages = (t - self._ledger_ts)[received]
-        self._apply(np.asarray(agg), c.step_size(t))
+        if self._dev is None:
+            agg = self.rule(np.asarray(self._ledger_g, np.float64),
+                            received)
+            self._apply(np.asarray(agg), c.step_size(t))
+        else:
+            self._device_step(received, c.step_size(t))
         self.t += 1
         # the event loop already advanced self.clock to the last delivery
         # time; rewind to the step start so _record's advance lands the

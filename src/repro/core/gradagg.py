@@ -67,17 +67,27 @@ def agg_trimmed_mean(g: jnp.ndarray, received: jnp.ndarray,
                      f: int) -> jnp.ndarray:
     """Coordinate-wise: drop the f largest and f smallest received values
     per coordinate, average the rest. Non-received values excluded."""
-    r = received[:, None].astype(g.dtype)
     m = jnp.sum(received.astype(jnp.int32))
     lo = jnp.where(received[:, None], g, BIG)
-    hi = jnp.where(received[:, None], g, -BIG)
     srt_lo = jnp.sort(lo, axis=0)                    # received ascending
     ranks = jnp.arange(g.shape[0])[:, None]
     keep = (ranks >= f) & (ranks < m - f)            # trim f per side
     total = jnp.sum(jnp.where(keep, srt_lo, 0.0), axis=0)
     cnt = jnp.maximum(m - 2 * f, 1)
-    del hi
     return total / cnt.astype(g.dtype)
+
+
+def quantize_int8_parts(x: jnp.ndarray):
+    """The wire form of :func:`quantize_int8`: symmetric int8 payload +
+    one f32 scale per leading row. ``q`` values are integral in
+    [-127, 127], so the int8 cast is exact and dequantization from the
+    parts is bit-identical to the fused form below. The device
+    aggregation path ships these parts to ``kernels.ops.dequant_accum``
+    so the f32 dequantized stack is never materialized."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
 
 
 def quantize_int8(x: jnp.ndarray):
@@ -88,10 +98,8 @@ def quantize_int8(x: jnp.ndarray):
     The exact same math runs in ``repro.dist.collectives.quantized_psum``
     so reference/SPMD parity is bit-identical.
     """
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax / 127.0, 1e-30)
-    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
-    deq = q * scale
+    q, scale = quantize_int8_parts(x)
+    deq = q.astype(x.dtype) * scale
     return deq, x - deq
 
 
@@ -115,18 +123,13 @@ def make_gradagg(rule: str, f: int = 0) -> Callable:
 
 
 def tree_agg(rule: Callable, grads_stacked, received):
-    """grads_stacked: pytree with leading agent axis on every leaf."""
-    leaves, treedef = jax.tree.flatten(grads_stacked)
-    n = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
-    agg = rule(flat, received)
-    out, off = [], 0
-    for l in leaves:
-        sz = l[0].size
-        out.append(agg[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
-        off += sz
-    return jax.tree.unflatten(treedef, out)
+    """grads_stacked: pytree with leading agent axis on every leaf. Leaf
+    offsets/shapes come from the cached ``repro.core.ledger`` layout —
+    computed once per model, not per call (DESIGN.md §11)."""
+    from repro.core.ledger import layout_of  # lazy: ledger builds on this
+    layout = layout_of(grads_stacked, stacked=True)
+    agg = rule(layout.flatten_stack(grads_stacked), received)
+    return layout.unflatten(agg)
 
 
 def project_ball(x: jnp.ndarray, gamma: float) -> jnp.ndarray:

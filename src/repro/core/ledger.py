@@ -1,0 +1,198 @@
+"""Device-resident gradient ledger + cached flat layouts (DESIGN.md §11).
+
+The host reference engine rebuilds a fresh ``(n, P)`` float64 stack every
+iteration and runs the GradAgg rule op-by-op in eager mode — correct (it
+is the conformance reference) but the slowest layer of the server once P
+reaches LeNet size. This module is the device twin:
+
+- :class:`FlatLayout`    leaf offsets/shapes/dtypes of a gradient pytree,
+                         computed ONCE per (treedef, shapes) and cached —
+                         ``tree_agg``'s per-call offset recomputation and
+                         the SPMD stale ledger's per-leaf buffers both
+                         collapse onto it.
+- :class:`GradLedger`    a persistent ``(n_agents, P)`` f32 device buffer;
+                         uploads land via an in-place (donated) scatter
+                         ``.at[idx].set`` instead of per-step host
+                         stacking.
+- :func:`make_aggregate_apply`  ONE jit fusing rule -> step-size scale ->
+                         ``project_ball``, with the iterate donated, so
+                         the server's iteration is a single device
+                         dispatch instead of a numpy pipeline.
+
+Donation contract: on accelerator backends the iterate (and the scatter's
+destination buffer) are donated, so updates are in place; callers must
+not hold references to ``GradLedger.data`` across an ``upload``. The CPU
+backend cannot donate (jax would only warn), so donation is disabled
+there — semantics are identical either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_DONATE: Tuple[int, ...] = (
+    () if jax.default_backend() == "cpu" else (0,))
+
+
+class FlatLayout:
+    """Cached flat view of a gradient pytree.
+
+    Offsets, sizes, shapes and dtypes are computed once per model (per
+    (treedef, per-agent shapes, dtypes) key via :func:`layout_of`), not
+    per step — flatten/unflatten become pure reshape/concat with static
+    slicing, jit-friendly and allocation-minimal.
+    """
+
+    def __init__(self, treedef, shapes, dtypes):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.dtypes = tuple(jnp.dtype(d) for d in dtypes)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        off = np.concatenate([[0], np.cumsum(self.sizes)])
+        self.offsets = tuple(int(o) for o in off[:-1])
+        self.total = int(off[-1])
+
+    # -- flatten ---------------------------------------------------------
+    def flatten(self, tree: PyTree) -> jnp.ndarray:
+        """Pytree (per-agent leaf shapes) -> (P,) f32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.reshape(l, (-1,)).astype(jnp.float32) for l in leaves])
+
+    def flatten_stack(self, tree: PyTree) -> jnp.ndarray:
+        """Pytree with a leading agent axis on every leaf -> (n, P) f32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        n = leaves[0].shape[0]
+        return jnp.concatenate(
+            [jnp.reshape(l, (n, -1)).astype(jnp.float32) for l in leaves],
+            axis=1)
+
+    # -- unflatten -------------------------------------------------------
+    def unflatten(self, flat: jnp.ndarray, dtype=None) -> PyTree:
+        """(P,) -> pytree; leaves cast back to their stored dtypes (or a
+        uniform ``dtype`` override)."""
+        out = []
+        for shape, dt, off, sz in zip(self.shapes, self.dtypes,
+                                      self.offsets, self.sizes):
+            leaf = flat[off:off + sz].reshape(shape)
+            out.append(leaf.astype(dtype or dt))
+        return jax.tree.unflatten(self.treedef, out)
+
+    def unflatten_stack(self, flat: jnp.ndarray, dtype=None) -> PyTree:
+        """(n, P) -> pytree with the leading agent axis restored."""
+        n = flat.shape[0]
+        out = []
+        for shape, dt, off, sz in zip(self.shapes, self.dtypes,
+                                      self.offsets, self.sizes):
+            leaf = flat[:, off:off + sz].reshape((n,) + shape)
+            out.append(leaf.astype(dtype or dt))
+        return jax.tree.unflatten(self.treedef, out)
+
+
+_LAYOUTS: Dict[Tuple, FlatLayout] = {}
+
+
+def layout_of(tree: PyTree, stacked: bool = False) -> FlatLayout:
+    """The cached :class:`FlatLayout` of ``tree``. With ``stacked=True``
+    the leaves carry a leading agent axis that the layout strips (the
+    layout always describes the per-agent flat vector)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape[1:] if stacked else l.shape)
+                   for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    layout = _LAYOUTS.get(key)
+    if layout is None:
+        layout = _LAYOUTS[key] = FlatLayout(treedef, shapes, dtypes)
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# the persistent device ledger
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def _scatter_rows(buf, idx, rows):
+    return buf.at[idx].set(rows)
+
+
+class GradLedger:
+    """Persistent ``(n_agents, P)`` f32 device buffer of per-agent
+    gradients. One instance lives for the whole server run; uploads are
+    in-place row scatters (the buffer is donated on accelerators), so the
+    server never re-stacks or re-uploads the full ledger."""
+
+    def __init__(self, n_agents: int, dim_or_layout):
+        if isinstance(dim_or_layout, FlatLayout):
+            self.layout: Optional[FlatLayout] = dim_or_layout
+            dim = dim_or_layout.total
+        else:
+            self.layout = None
+            dim = int(dim_or_layout)
+        self.n_agents = int(n_agents)
+        self.dim = dim
+        self.data = jnp.zeros((self.n_agents, self.dim), jnp.float32)
+
+    def upload(self, idx, rows) -> None:
+        """Scatter ``rows (k, P)`` into agent rows ``idx (k,)``."""
+        idx = np.asarray(idx, np.int32).reshape(-1)
+        if idx.size == 0:
+            return
+        rows = jnp.asarray(rows, jnp.float32).reshape(idx.size, self.dim)
+        self.data = _scatter_rows(self.data, jnp.asarray(idx), rows)
+
+    def upload_row(self, j: int, row) -> None:
+        self.upload(np.array([j], np.int32),
+                    np.asarray(row, np.float32)[None])
+
+    def upload_tree(self, j: int, tree: PyTree) -> None:
+        """Scatter one agent's gradient pytree through the cached layout
+        (leaf offsets precomputed — no per-call layout work)."""
+        if self.layout is None:
+            raise ValueError("ledger was built without a FlatLayout")
+        self.upload_row(j, self.layout.flatten(tree))
+
+    # -- checkpointing ---------------------------------------------------
+    def host(self) -> np.ndarray:
+        """Host f32 copy (snapshot form; restoring it is bit-exact)."""
+        return np.asarray(self.data)
+
+    def load(self, arr) -> None:
+        self.data = jnp.asarray(np.asarray(arr, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# the fused server iteration
+
+
+@functools.lru_cache(maxsize=None)
+def make_aggregate_apply(rule: str, f: int, gamma: float) -> Callable:
+    """One fused jit for the server iteration over a resident ledger:
+
+        x' = project_ball(x - eta * GradAgg(g, received), gamma)
+
+    Signature: ``(x (P,) f32, g (n, P) f32, received (n,) bool, eta)``.
+    The rule is the registry's ``bind_device`` twin (Pallas kernels on
+    TPU, jnp elsewhere); the iterate is donated on accelerators. The
+    host f64 reference path stays the conformance/golden bit stream —
+    this is the opt-in ``EngineConfig.agg_backend="device"`` fast path.
+
+    Cached per (rule, f, gamma): server restore/reconfigure rebuilds the
+    engine, and a fresh closure per build would defeat jit's cache and
+    recompile the fused step every time.
+    """
+    from repro.core import gradagg            # projection exists once
+    from repro.dist.registry import get_rule  # lazy: dist sits above core
+    dev = get_rule(rule).bind_device(f)
+
+    def step(x, g, received, eta):
+        agg = dev(g, received).astype(jnp.float32)
+        return gradagg.project_ball(x - jnp.float32(eta) * agg, gamma)
+
+    return jax.jit(step, donate_argnums=_DONATE)

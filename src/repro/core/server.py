@@ -42,8 +42,10 @@ class AsyncDGDServer:
             "x": e.x.copy(), "t": e.t, "clock": e.clock,
             "cfg": dataclasses.asdict(
                 dataclasses.replace(e.cfg, step_size=None)),  # fn not stored
+            # host mode: the f64 reference matrix; device mode: the
+            # resident f32 GradLedger pulled back (bit-exact round trip)
             "ledger_ts": e._ledger_ts.copy(),
-            "ledger_g": e._ledger_g.copy(),
+            "ledger_g": e.ledger_host(),
             "busy_until": e._busy_until.copy(),
             "working_on": e._working_on.copy(),
             # iterate history: in-flight agents reference x^{t'} by
@@ -70,7 +72,7 @@ class AsyncDGDServer:
         e.t = snap["t"]
         e.clock = snap["clock"]
         e._ledger_ts = snap["ledger_ts"].copy()
-        e._ledger_g = snap["ledger_g"].copy()
+        e.load_ledger(snap["ledger_g"])
         e._busy_until = snap["busy_until"].copy()
         e._working_on = snap["working_on"].copy()
         e._x_hist = {k: v.copy() for k, v in snap.get("x_hist", {}).items()}

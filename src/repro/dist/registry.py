@@ -13,7 +13,13 @@ One ``AggregationRule`` strategy object per rule, bundling
                   reference/SPMD parity suite,
 - ``wire_bytes``  upload payload width per parameter (None -> the wire
                   dtype's width; 1 for the int8 compressed rule), which
-                  the async engine's ``History.bytes_tx`` accounting uses.
+                  the async engine's ``History.bytes_tx`` accounting uses,
+- ``device``      the f32 device-resident twin over a flat ``(n, P)``
+                  ledger (Pallas kernels on TPU via ``kernels/ops.py``,
+                  jnp elsewhere), consumed by the fused
+                  ``core.ledger.make_aggregate_apply`` jit; rules without
+                  a specialized form fall back to their (jittable)
+                  reference.
 
 ``EngineConfig.rule`` (via ``gradagg.make_gradagg``) and
 ``TrainConfig.mode`` (via ``resolve_mode`` in the SPMD step factories)
@@ -44,6 +50,7 @@ class AggregationRule:
     needs_f: bool = False
     normalized: bool = False             # True if output is already a mean
     wire_bytes: Optional[int] = None     # upload bytes/param (None = dtype)
+    device: Optional[Callable] = None    # (g (n,P) f32, received[, f]) twin
     doc: str = ""
 
     def bind_reference(self, f: int = 0) -> Callable:
@@ -51,6 +58,16 @@ class AggregationRule:
         if self.needs_f:
             return partial(self.reference, f=f)
         return self.reference
+
+    def bind_device(self, f: int = 0) -> Callable:
+        """Device twin ``(g (n, P) f32, received (n,) bool) -> (P,) f32``
+        for the fused aggregate_apply jit over a resident ledger
+        (DESIGN.md §11). Falls back to the reference — every reference
+        rule is pure jittable jnp — when no kernel-backed form exists."""
+        fn = self.device or self.reference
+        if self.needs_f:
+            return partial(fn, f=f)
+        return fn
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +101,38 @@ def _spmd_quantized(tree, mask, f, axes):
 
 
 # ---------------------------------------------------------------------------
+# device twins (flat (n, P) f32 ledger form; kernels/ops dispatches on
+# backend — Pallas on TPU, jnp oracle elsewhere)
+
+
+def _dev_sum(g, received):
+    from repro.kernels.agg import masked_sum_dot
+    return masked_sum_dot(g, received)
+
+
+def _dev_mean(g, received):
+    from repro.kernels.agg import masked_sum_dot
+    s = masked_sum_dot(g, received)
+    return s / jnp.maximum(jnp.sum(received.astype(jnp.float32)), 1.0)
+
+
+def _dev_cge(g, received, f):
+    from repro.kernels import ops as K
+    return K.masked_cge_reduce(g, received, f=f)
+
+
+def _dev_trimmed(g, received, f):
+    from repro.kernels import ops as K
+    return K.trimmed_mean_tiled(g, received, f=f)
+
+
+def _dev_quantized(g, received):
+    from repro.kernels import ops as K
+    q, scale = gradagg.quantize_int8_parts(g.astype(jnp.float32))
+    return K.dequant_accum(q, scale[:, 0], received)
+
+
+# ---------------------------------------------------------------------------
 # registry
 
 
@@ -110,29 +159,32 @@ def rule_names() -> Tuple[str, ...]:
 
 register_rule(AggregationRule(
     name="sum", reference=gradagg.agg_sum,
-    collective=C.masked_psum, spmd=_spmd_sum,
+    collective=C.masked_psum, spmd=_spmd_sum, device=_dev_sum,
     doc="Algorithm 1 eq. (3): sum over S^t (one bulk psum)."))
 
 register_rule(AggregationRule(
     name="mean", reference=gradagg.agg_mean,
     collective=C.masked_psum, spmd=_spmd_mean, normalized=True,
+    device=_dev_mean,
     doc="sum / |S^t| — the LR-rescaled D-SGD variant."))
 
 register_rule(AggregationRule(
     name="cge", reference=gradagg.agg_cge,
     collective=C.cge_psum, spmd=_spmd_cge, needs_f=True,
+    device=_dev_cge,
     doc="CGE filter eq. (18): sum of the m-f smallest-norm gradients "
         "(norms all-reduce + masked psum)."))
 
 register_rule(AggregationRule(
     name="trimmed_mean", reference=gradagg.agg_trimmed_mean,
     collective=C.trimmed_mean_all, spmd=_spmd_trimmed, needs_f=True,
-    normalized=True,
+    normalized=True, device=_dev_trimmed,
     doc="Coordinate-wise trimmed mean (Yin et al.): full stack gather."))
 
 register_rule(AggregationRule(
     name="quantized", reference=gradagg.agg_quantized,
     collective=C.quantized_psum, spmd=_spmd_quantized, wire_bytes=1,
+    device=_dev_quantized,
     doc="int8 error-feedback compressed sum (1 byte/param uploads)."))
 
 

@@ -64,6 +64,50 @@ def masked_scale(x, scale, *, impl: str = "auto"):
     return _cn.masked_scale(x, scale, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("f", "impl"))
+def masked_cge_reduce(g, received, *, f: int = 0, impl: str = "auto"):
+    """CGE aggregate over the (n, P) gradient ledger: per-agent norms +
+    keep-set + masked sum fused (paper eq. (18))."""
+    from repro.kernels import agg as _agg
+    if impl == "ref":
+        return _ref.ref_masked_cge_reduce(g, received, f)
+    if impl == "auto" and not _on_tpu():
+        return _agg.masked_cge_dot(g, received, f)   # matvec production form
+    interpret = impl == "interpret" or not _on_tpu()
+    return _agg.masked_cge_reduce(g, received, f, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("f", "impl"))
+def trimmed_mean_tiled(g, received, *, f: int = 0, impl: str = "auto"):
+    """Coordinate-wise trimmed mean over the (n, P) ledger via running
+    min/max extraction (no materialized sorted copy for small f). Unlike
+    the other ops, the non-TPU "auto" path is NOT the sort oracle but the
+    portable jnp form of the same extraction algorithm — the win is
+    algorithmic, not Pallas-specific (impl="ref" still forces the sort)."""
+    from repro.kernels import agg as _agg
+    if impl == "ref":
+        return _ref.ref_trimmed_mean(g, received, f)
+    if impl == "auto" and not _on_tpu():
+        return _agg.trimmed_mean_running(g, received, f)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _agg.trimmed_mean_tiled(g, received, f, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def dequant_accum(q, scale, received, *, impl: str = "auto"):
+    """int8 payload x per-agent scale, masked f32 accumulation (the
+    quantized rule's server-side reduction)."""
+    from repro.kernels import agg as _agg
+    if impl == "ref":
+        return _ref.ref_dequant_accum(q, scale, received)
+    if impl == "auto" and not _on_tpu():
+        # matvec production form: fold scale+mask into one weight vector
+        w = scale.astype(jnp.float32) * received.astype(jnp.float32)
+        return w @ q.astype(jnp.float32)
+    interpret = impl == "interpret" or not _on_tpu()
+    return _agg.dequant_accum(q, scale, received, interpret=interpret)
+
+
 def tree_bucket(tree, width: int = 2048):
     """Flatten a gradient pytree into (n_buckets, width) rows (zero-padded)
     — the layout the CGE kernels consume."""

@@ -60,6 +60,26 @@ def ref_paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_masked_cge_reduce(g, received, f: int):
+    """CGE aggregate oracle: exactly ``gradagg.agg_cge`` in f32 (the
+    keep-set math exists once — ``cge_mask_from_norms``)."""
+    from repro.core import gradagg
+    return gradagg.agg_cge(g.astype(jnp.float32), received, f)
+
+
+def ref_trimmed_mean(g, received, f: int):
+    """Coordinate-wise trimmed-mean oracle: ``gradagg.agg_trimmed_mean``
+    in f32 (full sort; the kernel's running min/max must match it)."""
+    from repro.core import gradagg
+    return gradagg.agg_trimmed_mean(g.astype(jnp.float32), received, f)
+
+
+def ref_dequant_accum(q, scale, received):
+    """q: (n, P) int8, scale: (n,) f32 -> (P,) f32 masked dequant sum."""
+    w = scale.astype(jnp.float32) * received.astype(jnp.float32)
+    return jnp.sum(q.astype(jnp.float32) * w[:, None], axis=0)
+
+
 def ref_block_sq_norms(x):
     """x: (n, w) -> (n,) fp32 squared norms."""
     xf = x.astype(jnp.float32)

@@ -94,10 +94,14 @@ def init_state(rng, cfg: ArchConfig, tc: TrainConfig, max_pos: int = 32768,
     state = {"params": params, "opt": opt,
              "step": jnp.zeros((), jnp.int32)}
     if tc.mode == "stale":
+        # one flat (n_agents, P) f32 buffer per run instead of a per-leaf
+        # pytree of ledgers: the rule-(15) substitution and the masked
+        # psum run over a single resident array, and the leaf offsets are
+        # the cached repro.core.ledger layout (DESIGN.md §11)
+        from repro.core.ledger import layout_of
         state["ledger"] = {
-            "g": jax.tree.map(
-                lambda p: jnp.zeros((n_agents,) + p.shape, jnp.float32),
-                params),
+            "g": jnp.zeros((n_agents, layout_of(params).total),
+                           jnp.float32),
             "ts": jnp.full((n_agents,), -1, jnp.int32),
         }
     if tc.mode == "quantized":
@@ -233,19 +237,19 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
                      else _psum_all(mask_self, dp))
             loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "stale":
-            ledger_self = jax.tree.map(lambda l: l[0], state["ledger"]["g"])
+            from repro.core.ledger import layout_of
+            layout = layout_of(grads)
+            ledger_self = state["ledger"]["g"][0]          # (P,) flat
             ts_self = state["ledger"]["ts"][0]
             fresh = mask_self > 0
             new_ts = jnp.where(fresh, state["step"], ts_self)
             usable = (state["step"] - new_ts) <= tc.tau
-            contrib = jax.tree.map(
-                lambda g, l: jnp.where(fresh, g.astype(jnp.float32), l),
-                grads, ledger_self)
-            agg = rule.collective(contrib, usable.astype(jnp.float32), dp)
+            contrib = jnp.where(fresh, layout.flatten(grads), ledger_self)
+            agg_flat = rule.collective(contrib,
+                                       usable.astype(jnp.float32), dp)
+            agg = layout.unflatten(agg_flat, dtype=jnp.float32)
             denom = _psum_all(usable.astype(jnp.float32), dp)
-            new_ledger = {
-                "g": jax.tree.map(lambda c: c[None], contrib),
-                "ts": new_ts[None]}
+            new_ledger = {"g": contrib[None], "ts": new_ts[None]}
             loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "quantized":
             err_self = jax.tree.map(lambda l: l[0], state["err"])

@@ -47,7 +47,7 @@ class ServeEngine:
         self.kv = PagedKVCache(cfg, self.ccfg)
         self.sched = Scheduler(self.ccfg)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
-                      "admitted": 0, "retired": 0}
+                      "admitted": 0, "retired": 0, "table_uploads": 0}
         self._next_rid = 0
 
         def _prefill(params, tokens):
@@ -142,10 +142,13 @@ class ServeEngine:
         toks = np.zeros((self.ccfg.num_slots, 1), np.int32)
         for slot, st in self.sched.active.items():
             toks[slot, 0] = st.pending
+        # page tables / lengths are cached device-side behind a dirty
+        # flag — a decode-only step re-uses them instead of re-uploading
         nxt, new_cache = self._decode(
             self.params, jnp.asarray(toks), self.kv.cache,
             self.kv.kv_lens_dev, self.kv.page_table_dev)
         self.stats["decode_steps"] += 1
+        self.stats["table_uploads"] = self.kv.table_uploads
         self.kv.update(new_cache)
         active = list(self.sched.active)
         self.kv.commit_token(active)     # each slot's pending token landed

@@ -136,6 +136,14 @@ class PagedKVCache:
         self.page_table = np.zeros((S, ccfg.max_pages_per_seq), np.int32)
         self.kv_lens = np.zeros((S,), np.int32)
         self._slot_pages: Dict[int, List[int]] = {}
+        # device mirrors of the host tables, refreshed only when an
+        # admission/eviction dirties them (decode-only steps bump the
+        # lengths on device instead of re-uploading — see commit_token)
+        self._tables_dirty = True
+        self._tbl_dev: Optional[jnp.ndarray] = None
+        self._lens_dev: Optional[jnp.ndarray] = None
+        self._active_dev: Optional[jnp.ndarray] = None
+        self.table_uploads = 0        # perf counter (tests/benchmarks)
         dt = jnp.dtype(cfg.compute_dtype)
 
         # recurrent layers come straight from init_cache at batch=num_slots;
@@ -154,13 +162,30 @@ class PagedKVCache:
     # NB: explicit copies. On the CPU backend ``jnp.asarray(np_array)`` is
     # zero-copy, and the host arrays are mutated in place (commit_token /
     # admit) while a dispatched decode may still be reading the view.
+    # The copies are cached behind a dirty flag: the steady decode-only
+    # stream re-uses the device tables for every token, and only an
+    # admission or eviction pays the host->device upload again.
+    def _refresh_device_tables(self) -> None:
+        self._tbl_dev = jnp.asarray(self.page_table.copy())
+        self._lens_dev = jnp.asarray(self.kv_lens.copy())
+        active = np.zeros((self.ccfg.num_slots,), np.int32)
+        for s in self._slot_pages:
+            active[s] = 1
+        self._active_dev = jnp.asarray(active)
+        self._tables_dirty = False
+        self.table_uploads += 1
+
     @property
     def page_table_dev(self) -> jnp.ndarray:
-        return jnp.asarray(self.page_table.copy())
+        if self._tables_dirty:
+            self._refresh_device_tables()
+        return self._tbl_dev
 
     @property
     def kv_lens_dev(self) -> jnp.ndarray:
-        return jnp.asarray(self.kv_lens.copy())
+        if self._tables_dirty:
+            self._refresh_device_tables()
+        return self._lens_dev
 
     def update(self, new_cache) -> None:
         self.cache = new_cache
@@ -192,6 +217,7 @@ class PagedKVCache:
         row[:need] = pages
         self.page_table[slot] = row
         self.kv_lens[slot] = prompt_len
+        self._tables_dirty = True
 
         blocks = list(self.cache)
         for pos, kind in enumerate(self.cfg.layer_pattern):
@@ -229,11 +255,22 @@ class PagedKVCache:
         self.alloc.free(pages)
         self.page_table[slot] = 0
         self.kv_lens[slot] = 0
+        self._tables_dirty = True
 
     def commit_token(self, slots: Sequence[int]) -> None:
-        """Account the token the decode step just wrote for each slot."""
+        """Account the token the decode step just wrote for each slot.
+
+        On the steady decode path (no occupancy change since the last
+        refresh) the device lengths advance with one device-side add of
+        the cached occupancy mask — no host->device re-upload per token.
+        """
         for s in slots:
             self.kv_lens[s] += 1
+        if not self._tables_dirty and self._lens_dev is not None:
+            if set(slots) == set(self._slot_pages):
+                self._lens_dev = self._lens_dev + self._active_dev
+            else:                     # partial commit: fall back to upload
+                self._tables_dirty = True
 
     # -- debug / test helpers --------------------------------------------
     def gather_dense(self, slot: int, pos: int, name: str) -> jnp.ndarray:

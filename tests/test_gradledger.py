@@ -1,0 +1,212 @@
+"""GradLedger / device aggregation path: flat-layout round trips, scatter
+uploads, host-vs-device engine parity, and the determinism regressions —
+device-backend run -> snapshot -> restore -> run is bit-identical, and
+the default host backend still replays the committed golden traces
+verbatim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncEngine, EngineConfig
+from repro.core.ledger import (FlatLayout, GradLedger, layout_of,
+                               make_aggregate_apply)
+from repro.core.redundancy import make_redundant_quadratics
+from repro.core.server import AsyncDGDServer
+
+N, D = 8, 4
+
+
+def _costs():
+    return make_redundant_quadratics(N, D, spread=0.02, cond=1.5, seed=0)
+
+
+def _cfg(**kw):
+    base = dict(n_agents=N, step_size=lambda t: 0.02, proj_gamma=30.0,
+                seed=1)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mk(cfg, costs=None):
+    costs = costs or _costs()
+    return AsyncEngine(lambda j, x, rng: costs.grad(j, x), np.zeros(D), cfg,
+                       loss_fn=costs.loss, x_star=costs.global_min())
+
+
+# ---------------------------------------------------------------------------
+# FlatLayout
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+            "b": {"w": jnp.asarray(rng.normal(size=(5,)), jnp.bfloat16),
+                  "s": jnp.asarray(rng.normal(size=()), jnp.float32)}}
+
+
+def test_flat_layout_round_trip():
+    tree = _tree()
+    layout = layout_of(tree)
+    assert layout.total == 3 * 4 + 5 + 1
+    flat = layout.flatten(tree)
+    back = layout.unflatten(flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-2)
+
+
+def test_flat_layout_is_cached_per_model():
+    t1, t2 = _tree(1), _tree(2)
+    assert layout_of(t1) is layout_of(t2)          # same treedef+shapes
+    stacked = {"a": jnp.zeros((7, 3, 4)), "b": {"w": jnp.zeros((7, 5)),
+                                                "s": jnp.zeros((7,))}}
+    lay = layout_of(stacked, stacked=True)
+    assert lay.total == layout_of(t1).total
+    flat2 = lay.flatten_stack(stacked)
+    assert flat2.shape == (7, lay.total)
+    back = lay.unflatten_stack(flat2)
+    assert back["a"].shape == (7, 3, 4)
+
+
+def test_tree_agg_unchanged_semantics():
+    """The layout-cached tree_agg must reproduce the old concat-per-call
+    form exactly (flatten order is leaf order, f32)."""
+    from repro.core import gradagg
+    rng = np.random.default_rng(3)
+    stacked = {"a": jnp.asarray(rng.normal(size=(6, 2, 3)), jnp.float32),
+               "z": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)}
+    rx = jnp.asarray(rng.random(6) > 0.4)
+    out = gradagg.tree_agg(gradagg.agg_mean, stacked, rx)
+    flat = jnp.concatenate([stacked["a"].reshape(6, -1),
+                            stacked["z"].reshape(6, -1)], axis=1)
+    ref = gradagg.agg_mean(flat, rx)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(out["a"]).ravel(),
+                        np.asarray(out["z"]).ravel()]),
+        np.asarray(ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# GradLedger
+
+
+def test_ledger_scatter_uploads():
+    led = GradLedger(5, 6)
+    rows = np.arange(12, dtype=np.float32).reshape(2, 6)
+    led.upload([1, 3], rows)
+    host = led.host()
+    np.testing.assert_array_equal(host[1], rows[0])
+    np.testing.assert_array_equal(host[3], rows[1])
+    np.testing.assert_array_equal(host[0], 0)
+    led.upload_row(3, np.full(6, -1.0))
+    assert (led.host()[3] == -1).all()
+    led.upload([], np.zeros((0, 6)))               # no-op, no error
+    snap = led.host()
+    led2 = GradLedger(5, 6)
+    led2.load(snap)
+    np.testing.assert_array_equal(led2.host(), snap)
+
+
+def test_ledger_upload_tree_uses_layout():
+    tree = _tree()
+    lay = layout_of(tree)
+    led = GradLedger(3, lay)
+    led.upload_tree(2, tree)
+    np.testing.assert_allclose(led.host()[2],
+                               np.asarray(lay.flatten(tree)), rtol=1e-6)
+    assert (led.host()[:2] == 0).all()
+
+
+def test_fused_aggregate_apply_matches_pieces():
+    from repro.core import gradagg
+    step = make_aggregate_apply("cge", 1, 0.5)
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(6, 40)), jnp.float32)
+    rx = jnp.asarray([True] * 5 + [False])
+    x_host = rng.normal(size=40).astype(np.float32)
+    # build the reference before the call: the fused step donates x
+    agg = gradagg.agg_cge(g, rx, 1)
+    ref = gradagg.project_ball(x_host - 0.1 * np.asarray(agg), 0.5)
+    out = step(jnp.asarray(x_host), g, rx, 0.1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine parity + determinism
+
+
+@pytest.mark.parametrize("mode,rule,f", [
+    ("fresh", "sum", 0), ("fresh", "cge", 1), ("fresh", "trimmed_mean", 1),
+    ("fresh", "quantized", 0), ("stale", "mean", 0),
+])
+def test_device_backend_tracks_host_reference(mode, rule, f):
+    costs = _costs()
+    hist = {}
+    for backend in ("host", "device"):
+        eng = _mk(_cfg(r=2, mode=mode, tau=3, f=f, rule=rule,
+                       agg_backend=backend), costs)
+        h = eng.run(40)
+        hist[backend] = (np.asarray(h.loss), eng.x.copy(),
+                         h.bytes_tx, list(h.n_rx))
+    np.testing.assert_allclose(hist["host"][0], hist["device"][0],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hist["host"][1], hist["device"][1],
+                               rtol=1e-3, atol=1e-5)
+    # event stream identical: same accounting, same upload counts
+    assert hist["host"][2] == hist["device"][2]
+    assert hist["host"][3] == hist["device"][3]
+
+
+def test_device_snapshot_restore_bit_identical():
+    """The ISSUE's determinism regression: device-backend server run ->
+    snapshot -> restore -> run reproduces the uninterrupted run bit for
+    bit (x, full History, ledger)."""
+    costs = _costs()
+    cfg = _cfg(r=2, mode="stale", tau=2, agg_backend="device")
+    srv = AsyncDGDServer(lambda j, x, rng: costs.grad(j, x), np.zeros(D),
+                         cfg, loss_fn=costs.loss)
+    srv.run(15)
+    snap = srv.snapshot()
+    srv.run(25)
+    x_a = srv.x.copy()
+    hist_a = dataclasses.asdict(srv.engine.hist)
+    ledger_a = srv.engine.ledger_host()
+    srv.restore(snap, cfg)
+    srv.run(25)
+    np.testing.assert_array_equal(srv.x, x_a)            # exact, not close
+    np.testing.assert_array_equal(srv.engine.ledger_host(), ledger_a)
+    assert dataclasses.asdict(srv.engine.hist) == hist_a
+
+
+def test_device_backend_fresh_snapshot_roundtrip():
+    costs = _costs()
+    cfg = _cfg(r=1, mode="fresh", rule="cge", f=1, agg_backend="device")
+    srv = AsyncDGDServer(lambda j, x, rng: costs.grad(j, x), np.zeros(D),
+                         cfg, loss_fn=costs.loss)
+    srv.run(10)
+    snap = srv.snapshot()
+    srv.run(10)
+    x_a = srv.x.copy()
+    srv.restore(snap, cfg)
+    srv.run(10)
+    np.testing.assert_array_equal(srv.x, x_a)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="agg_backend"):
+        _mk(_cfg(agg_backend="gpu"))
+
+
+def test_host_default_replays_golden_traces():
+    """agg_backend defaults to host, and the default path still replays a
+    committed golden trace verbatim (the device path is opt-in and may
+    not disturb the f64 reference bit stream)."""
+    from repro.sim import golden
+    assert EngineConfig(n_agents=2).agg_backend == "host"
+    name = golden.SMOKE_SCENARIOS[0]
+    assert golden.verify([name])[name] == []

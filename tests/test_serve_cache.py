@@ -143,3 +143,35 @@ def test_null_page_survives_idle_writes(qwen_setup):
     after = np.asarray(kv.gather_dense(0, pos0, "k_pages"))
     # slot 0's resident tokens are untouched by the idle slot's write
     np.testing.assert_array_equal(after, before["k_pages"])
+
+
+def test_device_tables_cached_until_dirty(qwen_setup):
+    """Perf regression (ISSUE 4): the decode-only steady state must not
+    re-upload page tables/kv_lens every token — only admissions and
+    evictions dirty the cached device mirrors; commit_token bumps the
+    lengths with a device-side add."""
+    cfg, dense = qwen_setup
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    kv = PagedKVCache(cfg, ccfg)
+    kv.admit(0, dense, 11, 20)
+    kv.admit(1, dense, 11, 20)
+    _ = kv.page_table_dev, kv.kv_lens_dev
+    uploads0 = kv.table_uploads
+    for _step in range(10):                  # pure decode stream
+        tbl, lens = kv.page_table_dev, kv.kv_lens_dev
+        np.testing.assert_array_equal(np.asarray(tbl), kv.page_table)
+        np.testing.assert_array_equal(np.asarray(lens), kv.kv_lens)
+        kv.commit_token([0, 1])
+    assert kv.table_uploads == uploads0      # zero re-uploads in 10 tokens
+    # the device lengths tracked the host bumps without a refresh
+    np.testing.assert_array_equal(np.asarray(kv.kv_lens_dev), kv.kv_lens)
+    kv.evict(1)                              # occupancy change -> dirty
+    _ = kv.kv_lens_dev
+    assert kv.table_uploads == uploads0 + 1
+    np.testing.assert_array_equal(np.asarray(kv.kv_lens_dev), kv.kv_lens)
+    # partial commit (slot set != occupancy) falls back to re-upload
+    kv.admit(1, dense, 11, 20)
+    _ = kv.kv_lens_dev
+    kv.commit_token([0])
+    np.testing.assert_array_equal(np.asarray(kv.kv_lens_dev), kv.kv_lens)

@@ -117,7 +117,7 @@ def test_greedy_generate_single_step_needs_no_decode():
         eng.submit(np.asarray(prompt[i]), 1)
     eng.run()
     assert eng.stats == {"prefill_calls": 1, "decode_steps": 0,
-                         "admitted": 2, "retired": 2}
+                         "admitted": 2, "retired": 2, "table_uploads": 0}
 
 
 # -- MLA / hybrid / MoE families: logit-level paged-vs-dense parity -----
