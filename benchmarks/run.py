@@ -22,6 +22,9 @@ def main() -> None:
                          "redundancy,roofline,serve,agg")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
+    ap.add_argument("--record", action="store_true",
+                    help="serve: run the superstep K x arch sweep and "
+                         "commit BENCH_serve.json")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -55,8 +58,10 @@ def main() -> None:
        else comm_time.main)
 
     from benchmarks import serve_latency
-    go("serve", (lambda: serve_latency.main(200, 3)) if args.fast
-       else serve_latency.main)
+    go("serve", (lambda: serve_latency.main(200, 3, do_record=args.record,
+                                            smoke=True))
+       if args.fast
+       else (lambda: serve_latency.main(do_record=args.record)))
 
     from benchmarks import agg_throughput
     go("agg", (lambda: agg_throughput.main(smoke=True)) if args.fast

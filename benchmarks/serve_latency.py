@@ -1,4 +1,4 @@
-"""Serving tail latency vs redundancy r (DESIGN.md §9).
+"""Serving tail latency vs redundancy r + engine throughput (DESIGN.md §9/§12).
 
 Two measurements:
 
@@ -8,14 +8,22 @@ Two measurements:
    and whether the answered tokens match it (they must — honest replicas
    are deterministic copies).
 2. ``serve/engine`` — real tokens/s of the paged continuous-batching
-   engine on a reduced registry arch (CPU-scale smoke of the actual
-   decode path).
+   engine on reduced registry archs (CPU-scale smoke of the actual decode
+   path), sweeping the decode-superstep length K. The workload is run
+   once as a *warmup* on the same engine before the timed run, so jit
+   compile time never folds into the first measurement; ``--record``
+   writes the K x arch sweep to BENCH_serve.json (the serving analogue of
+   BENCH_agg.json), including the host_syncs-per-token figure and a
+   token-parity check of every K against the K=1 conformance path.
 
-    PYTHONPATH=src python benchmarks/serve_latency.py [--smoke]
+    PYTHONPATH=src python benchmarks/serve_latency.py \
+        [--smoke] [--superstep-k K] [--record]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -25,6 +33,11 @@ from repro.serve.dispatch import (DispatchConfig, RedundantDispatcher,
                                   honest_tokens, tail_latency)
 
 N_REPLICAS = 10
+
+RECORD_ARCHS = ("qwen2-0.5b", "deepseek-v2-236b")
+RECORD_KS = (1, 4, 8, 16)
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serve.json"
 
 
 def _replica_fn(j, request):
@@ -54,7 +67,31 @@ def run_dispatch(n_requests: int = 2000, seed: int = 0):
     return rows
 
 
-def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b"):
+def _requests(cfg, n_requests: int, seed: int):
+    """Mixed-length prompts with budgets big enough that the scheduler's
+    budget-bounded K actually reaches the cap (DESIGN.md §12)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        s0 = int(rng.integers(4, 17))
+        new = int(rng.integers(24, 33))
+        reqs.append((rng.integers(0, cfg.vocab_size, s0).astype(np.int32),
+                     new))
+    return reqs
+
+
+def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b",
+               superstep_k: int = 8, warmup: bool = True,
+               repeats: int = 1):
+    """Timed drain of a mixed-length workload at one superstep length.
+
+    The identical workload is submitted and drained once first on the
+    same engine (same prefill shape buckets, same K sequence), so the
+    timed pass measures steady-state tok/s, not XLA compilation; the
+    drain is repeated ``repeats`` times and the best wall time reported
+    (a single drain is ~0.1 s at reduced scale — too noisy to compare
+    K values on a shared machine).
+    """
     import jax
     from repro.configs.registry import get_config
     from repro.models.model import init_model
@@ -62,40 +99,120 @@ def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b"):
 
     cfg = get_config(arch).reduced()
     params = init_model(jax.random.PRNGKey(seed), cfg, max_pos=128)
-    rng = np.random.default_rng(seed)
     engine = ServeEngine(params, cfg, PagedCacheConfig(
-        num_slots=2, page_size=8, num_pages=17, max_pages_per_seq=4))
-    total = 0
-    for _ in range(n_requests):
-        s0 = int(rng.integers(4, 17))
-        new = int(rng.integers(4, 13))
-        total += new
-        engine.submit(rng.integers(0, cfg.vocab_size, s0).astype(np.int32),
-                      new)
-    t0 = time.time()
-    engine.run()
-    wall = time.time() - t0
-    return dict(arch=arch, tokens=total, wall_s=wall,
-                tok_s=total / max(wall, 1e-9), stats=engine.stats)
+        num_slots=2, page_size=8, num_pages=16, max_pages_per_seq=6),
+        superstep_k=superstep_k)
+    reqs = _requests(cfg, n_requests, seed)
+    total = sum(n for _, n in reqs)
+    if warmup:                       # compile prefill buckets + every K
+        for p, n in reqs:
+            engine.submit(p, n)
+        engine.run()
+    wall = float("inf")
+    for _ in range(max(repeats, 1)):
+        base = dict(engine.stats)    # timed pass reports deltas only
+        rids = [engine.submit(p, n) for p, n in reqs]
+        t0 = time.time()
+        out = engine.run()
+        wall = min(wall, time.time() - t0)
+    syncs = engine.stats["host_syncs"] - base["host_syncs"]
+    return dict(arch=arch, superstep_k=superstep_k, tokens=total,
+                wall_s=wall, tok_s=total / max(wall, 1e-9),
+                host_syncs=syncs, syncs_per_token=syncs / total,
+                supersteps=engine.stats["supersteps"] - base["supersteps"],
+                decode_steps=engine.stats["decode_steps"]
+                - base["decode_steps"],
+                prefill_calls=engine.stats["prefill_calls"]
+                - base["prefill_calls"],
+                n_requests=n_requests,
+                generated={rid: out[rid].tolist() for rid in rids})
 
 
-def main(n_requests: int = 2000, engine_requests: int = 8):
-    for row in run_dispatch(n_requests):
+def run_engine_sweep(n_requests: int = 8, seed: int = 0,
+                     repeats: int = 5):
+    """K x arch sweep with a token-parity check of every K against the
+    K=1 host-loop conformance reference (identical streams required)."""
+    rows = []
+    for arch in RECORD_ARCHS:
+        base = None
+        for k in RECORD_KS:
+            row = run_engine(n_requests=n_requests, seed=seed, arch=arch,
+                             superstep_k=k, repeats=repeats)
+            if k == 1:
+                base = row
+                row["match"] = True
+                row["speedup_vs_k1"] = 1.0
+            else:
+                row["match"] = row["generated"] == base["generated"]
+                row["speedup_vs_k1"] = row["tok_s"] / base["tok_s"]
+            rows.append(row)
+    return rows
+
+
+def record(rows_dispatch, rows_engine, engine_requests: int,
+           smoke: bool) -> None:
+    import jax
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "archs": list(RECORD_ARCHS),
+            "superstep_ks": list(RECORD_KS),
+            "engine_requests": engine_requests,
+            "smoke": smoke,      # a reduced sweep must be visibly reduced
+            "note": "reduced() registry archs; warmed jit; tok/s is a "
+                    "drained mixed-length workload (DESIGN.md §12)",
+        },
+        "dispatch": [{k: v for k, v in r.items()} for r in rows_dispatch],
+        "engine": [{k: v for k, v in r.items() if k != "generated"}
+                   for r in rows_engine],
+    }
+    # a reduced sweep must never clobber the committed full baseline
+    path = BENCH_PATH.with_suffix(".smoke.json") if smoke else BENCH_PATH
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+def main(n_requests: int = 2000, engine_requests: int = 8,
+         superstep_k: int = 8, do_record: bool = False,
+         smoke: bool = False):
+    rows_dispatch = run_dispatch(n_requests)
+    for row in rows_dispatch:
         print(f"serve/dispatch_r{row['r']},{row['wall_s'] * 1e6:.0f},"
               f"p50={row['p50']:.3f};p99={row['p99']:.3f};"
               f"p99_all={row['p99_all']:.3f};match={int(row['match'])}")
-    row = run_engine(engine_requests)
-    print(f"serve/engine_{row['arch']},{row['wall_s'] * 1e6:.0f},"
-          f"tok_s={row['tok_s']:.1f};decodes={row['stats']['decode_steps']};"
-          f"prefills={row['stats']['prefill_calls']}")
+    if do_record:
+        rows_engine = run_engine_sweep(engine_requests)
+        for row in rows_engine:
+            print(f"serve/engine_{row['arch']}_k{row['superstep_k']},"
+                  f"{row['wall_s'] * 1e6:.0f},"
+                  f"tok_s={row['tok_s']:.1f};"
+                  f"x_vs_k1={row['speedup_vs_k1']:.2f};"
+                  f"syncs_per_tok={row['syncs_per_token']:.3f};"
+                  f"match={int(row['match'])}")
+        record(rows_dispatch, rows_engine, engine_requests, smoke)
+        return
+    row = run_engine(engine_requests, superstep_k=superstep_k)
+    print(f"serve/engine_{row['arch']}_k{row['superstep_k']},"
+          f"{row['wall_s'] * 1e6:.0f},"
+          f"tok_s={row['tok_s']:.1f};"
+          f"syncs_per_tok={row['syncs_per_token']:.3f};"
+          f"decodes={row['decode_steps']};"
+          f"prefills={row['prefill_calls']}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes for CI")
+    ap.add_argument("--superstep-k", type=int, default=8,
+                    help="decode superstep length for the engine run")
+    ap.add_argument("--record", action="store_true",
+                    help="run the K x arch sweep and commit "
+                         "BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
-        main(n_requests=200, engine_requests=3)
+        main(n_requests=200, engine_requests=3,
+             superstep_k=args.superstep_k, do_record=args.record,
+             smoke=True)
     else:
-        main()
+        main(superstep_k=args.superstep_k, do_record=args.record)

@@ -18,6 +18,10 @@
 #          their gradagg oracles in interpret mode + the GradLedger
 #          determinism suite, then the aggregation-throughput benchmark
 #          smoke (host reference vs fused jitted path end to end).
+# Stage 7: device-resident serving path — the GQA-grouped paged
+#          flash-decode kernel against its oracle (interpret mode) and
+#          the decode-superstep engine against the superstep_k=1
+#          conformance loop, then the serving benchmark smoke at K=8.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,5 +49,11 @@ echo "== stage 6: aggregation kernels + throughput (smoke) =="
 JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_agg.py \
     tests/test_gradledger.py
 JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/agg_throughput.py --smoke
+
+echo "== stage 7: decode supersteps + grouped decode kernel =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_decode.py \
+    tests/test_serve_superstep.py
+JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/serve_latency.py \
+    --smoke --superstep-k 8
 
 echo "CI OK"

@@ -3,13 +3,23 @@
 The serving path stores KV in fixed-size physical pages
 (``repro.serve.kv_cache``); at decode each sequence holds a page table
 mapping logical pages to physical ones. The kernel grids over
-(B, H, Pmax) and walks each sequence's pages with the same online-softmax
-accumulation as ``flash_attention.py`` — the (T,) score row never leaves
-VMEM and no gathered/contiguous copy of the cache is ever materialized.
+**(B, Hkv, Pmax)** with a ``(G, D)`` query block per KV head
+(``G = H // Hkv``): all query heads that share a KV head score against
+one fetched page, so each page is moved HBM->VMEM **once per KV head**
+instead of once per query head — an ``H/Hkv``-fold cut in the dominant
+bandwidth term of the (memory-bound) decode. Accumulation is the same
+online softmax as ``flash_attention.py``; the (G, T) score rows never
+leave VMEM and no gathered/contiguous copy of the cache is ever
+materialized.
 
 Page indirection uses scalar prefetch (``pltpu.PrefetchScalarGridSpec``):
 the page table and lengths are prefetched to SMEM so each KV BlockSpec's
-index_map can pick the *physical* page for grid step (b, ·, p). Length
+index_map can pick the *physical* page for grid step (b, kv, p). The page
+walk is additionally bounded by each sequence's **actual** used pages
+``ceil(kv_len / PS)`` rather than the static Pmax: for p past the used
+count the index_map clamps to the last used page — consecutive identical
+block indices make the Pallas pipeline skip the copy, so trailing
+all-masked pages cost neither DMA nor (via ``pl.when``) compute. Length
 masking handles the ragged last page; for causal self-decode the query is
 at position kv_len-1, so the length mask is exactly the causal mask
 (cross-attention decode passes the memory length instead — same mask).
@@ -37,6 +47,12 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
+def _pages_used(ln, ps: int):
+    """Pages holding a length-``ln`` sequence, floored at 1 so the clamp
+    ``min(p, used-1)`` always names a fetchable (masked) page."""
+    return jnp.maximum(pl.cdiv(ln, ps), 1)
+
+
 def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
             num_pages: int):
@@ -49,35 +65,41 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (D,)
-    k = k_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)         # (PS, Dv)
+    ln = len_ref[b]
 
-    s = jax.lax.dot_general(q[None], k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    pos = p * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, page_size), 1)
-    valid = pos < len_ref[b]                       # ragged last page + causal
-    s = jnp.where(valid, s, NEG_INF)
+    # page-walk early exit: pages past ceil(len/PS) are revisits of the
+    # last used page (no DMA) and contribute nothing — skip the FLOPs too
+    @pl.when(p < _pages_used(ln, page_size))
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (PS, Dv)
 
-    m_prev = m_ref[...]                            # (1, 1)
-    l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    # explicit re-mask: on an all-masked page m_new is still NEG_INF and
-    # exp(s - m_new) would be 1, not 0 (the kv_len == 0 idle-slot case)
-    pr = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (1, PS)
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
-    pv = jax.lax.dot_general(pr, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * corr + pv
-    m_ref[...] = m_new
-    l_ref[...] = l_new
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        valid = pos < ln                     # ragged last page + causal
+        s = jnp.where(valid, s, NEG_INF)     # (G, PS) via broadcast
+
+        m_prev = m_ref[...]                            # (G, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # explicit re-mask: on an all-masked page m_new is still NEG_INF
+        # and exp(s - m_new) would be 1, not 0 (the kv_len == 0 case)
+        pr = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (G, PS)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pr, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(pr, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
 
     @pl.when(p == num_pages - 1)
     def _done():
         l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
 def paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens, *,
@@ -85,9 +107,12 @@ def paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens, *,
     """q: (B,H,D); k_pages: (N,PS,Hkv,D); v_pages: (N,PS,Hkv,Dv);
     page_table: (B,Pmax) int32; kv_lens: (B,) int32. Returns (B,H,Dv).
 
-    KV heads are grouped: head h reads KV head h // (H // Hkv). Page-table
-    entries past a sequence's length may be -1 or stale; they are clamped
-    to 0 and masked, so the pool's page 0 doubles as the null page.
+    KV heads are grouped: head h reads KV head h // (H // Hkv), i.e. the
+    (G, D) query block for KV head kv holds heads [kv*G, (kv+1)*G) —
+    exactly the layout ``jnp.repeat(kv, G, axis=heads)`` expands to.
+    Page-table entries past a sequence's length may be -1 or stale; they
+    are clamped to 0 and masked, so the pool's page 0 doubles as the null
+    page, and the walk early-exits after ceil(kv_len / PS) pages anyway.
     """
     b, h, d = q.shape
     n, ps, hkv, dv = v_pages.shape
@@ -102,26 +127,32 @@ def paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens, *,
                                           kv_lens)
 
     tbl = jnp.maximum(page_table, 0).astype(jnp.int32)
+    lens = kv_lens.astype(jnp.int32)
+    qg = q.reshape(b, hkv, g, d)
     kern = functools.partial(_kernel, scale=scale, page_size=ps,
                              num_pages=pmax)
+
+    def kv_map(b_, h_, p_, tbl_, l_):
+        # clamp the walk to the pages actually resident: for p >= used the
+        # block index equals the previous step's, so the copy is elided
+        p_eff = jnp.minimum(p_, _pages_used(l_[b_], ps) - 1)
+        return (tbl_[b_, p_eff], 0, h_, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, h, pmax),
+        grid=(b, hkv, pmax),
         in_specs=[
-            pl.BlockSpec((1, 1, d), lambda b_, h_, p_, tbl_, l_: (b_, h_, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, p_, tbl_, l_: (tbl_[b_, p_], 0,
-                                                       h_ // g, 0)),
-            pl.BlockSpec((1, ps, 1, dv),
-                         lambda b_, h_, p_, tbl_, l_: (tbl_[b_, p_], 0,
-                                                       h_ // g, 0)),
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, p_, tbl_, l_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, dv), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, dv),
-                               lambda b_, h_, p_, tbl_, l_: (b_, h_, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, h_, p_, tbl_, l_: (b_, h_, 0, 0)),
         scratch_shapes=[
-            _VMEM((1, 1), jnp.float32),
-            _VMEM((1, 1), jnp.float32),
-            _VMEM((1, dv), jnp.float32),
+            _VMEM((g, 1), jnp.float32),
+            _VMEM((g, 1), jnp.float32),
+            _VMEM((g, dv), jnp.float32),
         ],
     )
 
@@ -130,10 +161,11 @@ def paged_flash_decode(q, k_pages, v_pages, page_table, kv_lens, *,
         kwargs["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
         interpret=interpret,
         **kwargs,
-    )(tbl, kv_lens.astype(jnp.int32), q, k_pages, v_pages)
+    )(tbl, lens, qg, k_pages, v_pages)
+    return out.reshape(b, h, dv)

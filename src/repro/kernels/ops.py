@@ -38,7 +38,13 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
                            impl: str = "auto"):
     """Single-query attention over paged KV (serving decode hot path).
     q: (B,H,D); k_pages/v_pages: (N,PS,Hkv,D/Dv); page_table: (B,Pmax);
-    kv_lens: (B,). Returns (B,H,Dv)."""
+    kv_lens: (B,). Returns (B,H,Dv).
+
+    Both implementations are KV-head grouped (head h reads KV head
+    h // (H/Hkv), group lanes contiguous): the kernel grids over
+    (B, Hkv, Pmax) so each page is fetched once per KV head and
+    early-exits the walk after ceil(kv_len/PS) pages; the oracle scores
+    the (B, Hkv, G, D) query against the un-repeated gathered KV."""
     from repro.kernels import decode_attention as _da
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return _ref.ref_paged_decode_attention(q, k_pages, v_pages,

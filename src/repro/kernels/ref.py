@@ -35,29 +35,36 @@ def ref_paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens):
         causal mask; for cross-attention kv_lens is the memory length.
 
     Returns (B, H, Dv) in q.dtype with an fp32 softmax.
+
+    Grouped math, mirroring the kernel: the query is reshaped to
+    (B, Hkv, G, D) and contracted against the *un-repeated* (B, T, Hkv, ·)
+    gathered KV — head h of the flat output is group lane h % G of KV head
+    h // G, the layout ``jnp.repeat(kv, G, axis=heads)`` expands to. This
+    is also the production CPU path (``kernels/ops`` routes non-TPU "auto"
+    here), so skipping the H-fold KV materialization matters beyond
+    aesthetics.
     """
     b, h, d = q.shape
     hkv = k_pages.shape[2]
     g = h // hkv
     ps = k_pages.shape[1]
+    dv = v_pages.shape[-1]
     tbl = jnp.maximum(page_table, 0)
     k = k_pages[tbl]                       # (B, Pmax, PS, Hkv, D)
     v = v_pages[tbl]
     t = k.shape[1] * ps
     k = k.reshape(b, t, hkv, -1)
     v = v.reshape(b, t, hkv, -1)
-    if g > 1:
-        k = jnp.repeat(k, g, axis=2)
-        v = jnp.repeat(v, g, axis=2)
-    s_ = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+    qg = q.reshape(b, hkv, g, d)
+    s_ = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) * (d ** -0.5)
     mask = jnp.arange(t)[None, :] < kv_lens[:, None]          # (B, T)
-    s_ = jnp.where(mask[:, None, :], s_, NEG_INF)
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
     w = jax.nn.softmax(s_, axis=-1)
     # all-masked rows (kv_len == 0) produce a uniform softmax; zero them
-    w = jnp.where(jnp.any(mask, axis=1)[:, None, None], w, 0.0)
-    return jnp.einsum("bht,bthv->bhv", w,
-                      v.astype(jnp.float32)).astype(q.dtype)
+    w = jnp.where(jnp.any(mask, axis=1)[:, None, None, None], w, 0.0)
+    out = jnp.einsum("bkgt,btkv->bkgv", w, v.astype(jnp.float32))
+    return out.reshape(b, h, dv).astype(q.dtype)
 
 
 def ref_masked_cge_reduce(g, received, f: int):

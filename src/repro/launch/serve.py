@@ -59,14 +59,17 @@ def make_decode_step(cfg: ArchConfig, moe_groups: int = 1,
 
 
 def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
-                    steps: int, page_size: int = 8):
+                    steps: int, page_size: int = 8,
+                    superstep_k: int = 8):
     """CPU-scale generation driver on the paged serving engine.
 
     Returns ``prompt`` extended with exactly ``steps`` new tokens per row.
     The first token comes from the prefill logits (the old driver redid a
     full train-mode forward for it and dropped the final decode's token);
-    equal-length prompts admit as one group, so the whole batch costs
-    exactly one prefill plus ``steps - 1`` decode steps.
+    equal-length prompts admit as one group, so the whole batch costs one
+    prefill plus ``steps - 1`` decode iterations, grouped into
+    ``ceil((steps - 1) / superstep_k)`` device-resident supersteps
+    (``superstep_k=1`` forces the per-token host loop).
     """
     import numpy as np
     from repro.serve import PagedCacheConfig, ServeEngine
@@ -79,7 +82,7 @@ def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
     ccfg = PagedCacheConfig(num_slots=b, page_size=page_size,
                             num_pages=b * per_seq + 1,
                             max_pages_per_seq=per_seq)
-    engine = ServeEngine(params, cfg, ccfg)
+    engine = ServeEngine(params, cfg, ccfg, superstep_k=superstep_k)
     rids = [engine.submit(np.asarray(prompt[i]), steps) for i in range(b)]
     out = engine.run()
     new = jnp.asarray(np.stack([out[rid] for rid in rids]))

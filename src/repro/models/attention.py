@@ -196,9 +196,12 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions=None, kv_x=None,
         if "k_pages" in cache:
             # paged decode: append at (page_table[b, len//ps], len % ps),
             # then attend page-indirectly — kernels/ops dispatches to the
-            # Pallas flash-decode kernel on TPU and to the jnp gather
-            # oracle elsewhere (DESIGN.md §6/§9). The kernel resolves the
-            # KV-head grouping itself, so no repeat here.
+            # Pallas flash-decode kernel on TPU and to the grouped jnp
+            # oracle elsewhere (DESIGN.md §6/§9/§12). Both are KV-head
+            # grouped (each page fetched once per KV head, not once per
+            # query head) so no repeat here, and both accept `lens` as a
+            # scan carry: the serving engine's decode superstep advances
+            # it on device across K tokens without a host round-trip.
             from repro.kernels.ops import paged_decode_attention
             lens = cache_index
             ps = cache["k_pages"].shape[1]

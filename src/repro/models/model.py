@@ -271,6 +271,12 @@ def apply_model(params, tokens, cfg: ArchConfig, *,
           cache_index may be scalar or (B,) per-sequence lengths, and
           with a paged cache ``page_table`` (B, Pmax) routes attention
           KV through the page pools — see repro.serve.kv_cache).
+
+    Decode is scan-safe end to end: ``cache``, ``cache_index`` and the
+    tokens may all be carries of an outer ``lax.scan`` (the serving
+    engine's decode superstep, DESIGN.md §12) — positions, learned/rope
+    embeddings and the paged appends are computed from the traced
+    per-sequence lengths, never from host state.
     """
     b, s = tokens.shape
     decode = mode == "decode"

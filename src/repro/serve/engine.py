@@ -1,12 +1,25 @@
 """Model-coupled serving loop: continuous batching over the paged cache.
 
-One engine owns one jitted decode step of fixed batch ``num_slots``; every
-wall-clock step it (1) admits waiting requests into free slots (batched
-prefill per prompt-length group — the first generated token comes from the
-prefill logits, never from a second full forward), (2) runs one batched
-decode across all slots (idle slots point at the null page and are
-masked), (3) commits the decoded tokens and retires finished requests,
-freeing their pages and slots for the next admissions.
+One engine owns one jitted decode program of fixed batch ``num_slots``;
+every wall-clock step it (1) admits waiting requests into free slots
+(batched prefill per prompt-length group — the first generated token
+comes from the prefill logits, never from a second full forward), (2)
+runs a **decode superstep**: K decode iterations inside one jitted
+``lax.scan`` whose carry holds the pending tokens, the paged cache and
+the per-slot lengths — greedy argmax, KV appends, ``kv_lens`` bumps and
+done-masking (idle slots point at the null page) all stay on device, (3)
+downloads the K×B emitted tokens in ONE transfer, commits them and
+retires finished requests, freeing pages/slots for the next admissions.
+
+The scheduler picks ``K = min(superstep_cap, min remaining budgets)``
+(budgets are known at admission), so no slot can overrun its budget
+in-scan and the min-budget slot finishes exactly at the superstep
+boundary — the host is consulted only there (DESIGN.md §12). Straggler
+tolerance at the dispatch layer can't hide a synchronous host sync every
+token; with supersteps the engine pays O(1/K) host syncs per token
+(``stats["host_syncs"]``). ``superstep_k=1`` preserves the original
+host-driven per-token loop bit-exactly and is the conformance reference,
+the same way ``agg_backend="host"`` is for training (DESIGN.md §11).
 
 Greedy (argmax) decoding, matching the rest of the repo's drivers.
 
@@ -33,9 +46,13 @@ from repro.serve.scheduler import Request, RequestState, Scheduler
 
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig,
-                 ccfg: Optional[PagedCacheConfig] = None):
+                 ccfg: Optional[PagedCacheConfig] = None,
+                 superstep_k: int = 8):
+        if superstep_k < 1:
+            raise ValueError(f"need superstep_k >= 1, got {superstep_k}")
         self.params = params
         self.cfg = cfg
+        self.superstep_k = int(superstep_k)
         if cfg.moe is not None:
             cfg = dataclasses.replace(
                 cfg, moe=dataclasses.replace(
@@ -46,7 +63,11 @@ class ServeEngine:
         self.ccfg = ccfg or PagedCacheConfig()
         self.kv = PagedKVCache(cfg, self.ccfg)
         self.sched = Scheduler(self.ccfg)
+        # host_syncs counts device->host materializations (one per prefill
+        # group + one per superstep boundary): the drained-workload figure
+        # of merit is host_syncs / tokens ~ O(1/K) (DESIGN.md §12)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "supersteps": 0, "host_syncs": 0,
                       "admitted": 0, "retired": 0, "table_uploads": 0}
         self._next_rid = 0
 
@@ -63,12 +84,41 @@ class ServeEngine:
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt, new_cache
 
+        def _superstep(params, pending, cache, lens, tbl, remaining, *,
+                       k: int):
+            """K decode iterations fully on device (one lax.scan).
+
+            Carry = (pending (B,), cache pytree, lens (B,), remaining
+            (B,)). Each iteration feeds the pending token at per-slot
+            position ``lens``, argmaxes the logits, bumps the lengths of
+            active slots (remaining > 0) in-scan and holds everything
+            else fixed — idle slots keep writing their masked garbage
+            into the null page, exactly as in the per-token path. Emits
+            the (K, B) generated tokens; the host reads them once.
+            """
+            def body(carry, _):
+                pend, cch, ln, rem = carry
+                active = (rem > 0).astype(jnp.int32)
+                logits, _, cch = apply_model(
+                    params, pend[:, None], cfg, mode="decode", cache=cch,
+                    cache_index=ln, page_table=tbl, remat_policy="none")
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active == 1, nxt, pend)
+                return (nxt, cch, ln + active, rem - active), nxt
+
+            (pending, cache, lens, _), toks = jax.lax.scan(
+                body, (pending, cache, lens, remaining), None, length=k)
+            return toks, cache, lens
+
         self._prefill = jax.jit(_prefill)
         # donate the cache so the single-token page append updates the
         # pools in place instead of copying every pool every step (the
         # CPU backend can't donate and would only warn, so skip there)
         donate = () if jax.default_backend() == "cpu" else (2,)
         self._decode = jax.jit(_decode, donate_argnums=donate)
+        # one compiled program per distinct K (bounded by superstep_k)
+        self._superstep = jax.jit(_superstep, static_argnames=("k",),
+                                  donate_argnums=donate)
         # prompts admit in groups of one padded length each; padding to a
         # page multiple bounds the jit shape set to max_pages_per_seq
         # buckets. Right-padding is invisible to *causal attention*
@@ -118,6 +168,7 @@ class ServeEngine:
             first, cache = self._prefill(self.params, jnp.asarray(prompts))
             self.stats["prefill_calls"] += 1
             first = np.asarray(first)
+            self.stats["host_syncs"] += 1
             for i, st in enumerate(group):
                 s0 = st.req.prompt_len
                 one = jax.tree.map(lambda l, i=i: l[:, i:i + 1], cache)
@@ -128,6 +179,9 @@ class ServeEngine:
                 st.generated.append(st.pending)
                 if st.done:         # max_new_tokens == 1: no decode needed
                     self._retire(st.slot)
+        # keep the counter live for prefill-only workloads too — step()
+        # may never reach a decode that would otherwise refresh it
+        self.stats["table_uploads"] = self.kv.table_uploads
 
     def _retire(self, slot: int) -> None:
         self.kv.evict(slot)
@@ -135,10 +189,51 @@ class ServeEngine:
         self.stats["retired"] += 1
 
     def step(self) -> None:
-        """One serving step: admit -> batched decode -> commit/retire."""
+        """One serving step: admit -> decode superstep -> commit/retire.
+
+        ``superstep_k == 1`` runs the original host-driven per-token loop
+        verbatim (the bit-exact conformance path); ``superstep_k > 1``
+        runs K budget-bounded decode iterations in one jitted scan and
+        talks to the host once at the boundary.
+        """
         self._admit()
         if not self.sched.active:
             return
+        if self.superstep_k == 1:
+            self._step_single()
+            return
+        k = self.sched.superstep_k(self.superstep_k)
+        if k == 0:      # pragma: no cover - active slots always have budget
+            return
+        toks = np.zeros((self.ccfg.num_slots,), np.int32)
+        remaining = np.zeros((self.ccfg.num_slots,), np.int32)
+        for slot, st in self.sched.active.items():
+            toks[slot] = st.pending
+            remaining[slot] = st.req.max_new_tokens - len(st.generated)
+        # page tables / lengths are cached device-side behind a dirty
+        # flag — a decode-only superstep re-uses them; the lens carry
+        # advances in-scan and is adopted back via commit_tokens
+        out, new_cache, new_lens = self._superstep(
+            self.params, jnp.asarray(toks), self.kv.cache,
+            self.kv.kv_lens_dev, self.kv.page_table_dev,
+            jnp.asarray(remaining), k=k)
+        self.stats["decode_steps"] += k
+        self.stats["supersteps"] += 1
+        self.kv.update(new_cache)
+        active = list(self.sched.active)
+        self.kv.commit_tokens(active, k, new_lens)
+        out = np.asarray(out)            # (K, B): the one boundary sync
+        self.stats["host_syncs"] += 1
+        self.stats["table_uploads"] = self.kv.table_uploads
+        for slot in active:
+            st = self.sched.active[slot]
+            st.generated.extend(int(t) for t in out[:, slot])
+            st.pending = int(out[-1, slot])
+            if st.done:
+                self._retire(slot)
+
+    def _step_single(self) -> None:
+        """The original one-token host loop (superstep_k=1 conformance)."""
         toks = np.zeros((self.ccfg.num_slots, 1), np.int32)
         for slot, st in self.sched.active.items():
             toks[slot, 0] = st.pending
@@ -148,11 +243,13 @@ class ServeEngine:
             self.params, jnp.asarray(toks), self.kv.cache,
             self.kv.kv_lens_dev, self.kv.page_table_dev)
         self.stats["decode_steps"] += 1
-        self.stats["table_uploads"] = self.kv.table_uploads
+        self.stats["supersteps"] += 1
         self.kv.update(new_cache)
         active = list(self.sched.active)
         self.kv.commit_token(active)     # each slot's pending token landed
         nxt = np.asarray(nxt)
+        self.stats["host_syncs"] += 1
+        self.stats["table_uploads"] = self.kv.table_uploads
         for slot in active:
             st = self.sched.active[slot]
             st.pending = int(nxt[slot])

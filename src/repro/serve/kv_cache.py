@@ -272,6 +272,26 @@ class PagedKVCache:
             else:                     # partial commit: fall back to upload
                 self._tables_dirty = True
 
+    def commit_tokens(self, slots: Sequence[int], k: int,
+                      lens_dev: Optional[jnp.ndarray] = None) -> None:
+        """Superstep commit: ``k`` tokens landed for each slot in
+        ``slots`` inside one device-resident decode scan.
+
+        The length bumps already happened *in the scan body* (the lens
+        carry advances by the active mask every iteration); ``lens_dev``
+        is that scanned-out carry, adopted as the cached device mirror so
+        the steady superstep stream costs zero host->device uploads and
+        zero device adds outside the jitted scan. The host array stays
+        the source of truth for admission/eviction bookkeeping.
+        """
+        for s in slots:
+            self.kv_lens[s] += k
+        if (lens_dev is not None and not self._tables_dirty
+                and set(slots) == set(self._slot_pages)):
+            self._lens_dev = lens_dev
+        else:          # occupancy changed under us: re-upload next access
+            self._tables_dirty = True
+
     # -- debug / test helpers --------------------------------------------
     def gather_dense(self, slot: int, pos: int, name: str) -> jnp.ndarray:
         """Contiguous (P, kv_len, ...) view of one slot's paged leaf."""

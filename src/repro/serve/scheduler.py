@@ -91,6 +91,22 @@ class Scheduler:
         self.peak_active = max(self.peak_active, len(self.active))
         return out
 
+    def superstep_k(self, cap: int) -> int:
+        """Budget-bounded superstep length: the largest K <= cap such
+        that no active slot can overrun its token budget inside a K-long
+        device-resident decode scan (budgets are known at admission, so
+        the bound is exact — no speculative over-generation, and the
+        min-budget slot finishes exactly at the superstep boundary where
+        the host can retire it and admit a successor)."""
+        if cap < 1:
+            raise ValueError(f"need superstep cap >= 1, got {cap}")
+        rem = [st.req.max_new_tokens - len(st.generated)
+               for st in self.active.values()]
+        rem = [r for r in rem if r > 0]
+        if not rem:
+            return 0                 # nothing to decode this superstep
+        return min(cap, min(rem))
+
     def retire(self, slot: int) -> RequestState:
         st = self.active.pop(slot)
         self._free_slots.append(slot)

@@ -14,8 +14,10 @@ SHAPES = [
     # (B, H, Hkv, D, Dv, page_size, pages_per_seq, num_pages)
     (1, 1, 1, 64, 64, 16, 2, 4),
     (2, 4, 2, 64, 64, 16, 3, 8),      # GQA grouping
-    (3, 2, 2, 128, 64, 8, 4, 16),     # Dv != D (MLA-style)
+    (3, 2, 2, 128, 64, 8, 4, 16),     # Dv != D (MLA-style), H == Hkv
     (2, 2, 1, 32, 32, 128, 2, 8),     # lane-width pages
+    (2, 4, 2, 32, 32, 8, 1, 16),      # Pmax == 1 (init+accum+emit fused)
+    (2, 8, 2, 32, 32, 8, 3, 8),       # wide group G=4
 ]
 
 
@@ -88,6 +90,48 @@ def test_decode_empty_and_single_token_slots():
     # one valid token -> softmax weight 1 on it
     np.testing.assert_allclose(np.asarray(out[1]),
                                np.asarray(v_pages[tbl[1, 0], 0]), atol=1e-6)
+
+
+def test_decode_mixed_zero_and_ragged_lens():
+    """One batch mixing kv_len 0 (idle slot), a mid-page ragged length
+    and a full table — the grouped kernel's per-sequence early exit must
+    not leak between rows (ISSUE 5)."""
+    rng = np.random.default_rng(6)
+    b, h, hkv, d, ps, pmax, npg = 3, 4, 2, 32, 4, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_pages, v_pages = _pool(rng, npg, ps, hkv, d, d, jnp.float32)
+    tbl = _table(rng, b, pmax, npg)
+    lens = jnp.asarray([0, 6, pmax * ps], jnp.int32)
+    out = paged_flash_decode(q, k_pages, v_pages, tbl, lens, interpret=True)
+    ref = ref_paged_decode_attention(q, k_pages, v_pages, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-7)
+
+
+def test_decode_page_walk_early_exit_is_invisible():
+    """Trailing pages past ceil(kv_len/PS) are clamped revisits of the
+    last used page: widening the table with arbitrary (valid or -1)
+    entries must change nothing — the walk is bounded by the sequence's
+    actual used pages, not the static Pmax (ISSUE 5)."""
+    rng = np.random.default_rng(7)
+    b, h, hkv, d, ps, npg = 2, 4, 2, 32, 4, 32
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_pages, v_pages = _pool(rng, npg, ps, hkv, d, d, jnp.float32)
+    lens = jnp.asarray([5, 8], jnp.int32)         # 2 used pages each
+    narrow = _table(rng, b, 2, npg)
+    for fill in (-1, 3):               # garbage or live-looking entries
+        wide = jnp.concatenate(
+            [narrow, jnp.full((b, 6), fill, jnp.int32)], axis=1)
+        o_narrow = paged_flash_decode(q, k_pages, v_pages, narrow, lens,
+                                      interpret=True)
+        o_wide = paged_flash_decode(q, k_pages, v_pages, wide, lens,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(o_wide), np.asarray(o_narrow),
+                                   atol=1e-7)
+        ref = ref_paged_decode_attention(q, k_pages, v_pages, wide, lens)
+        np.testing.assert_allclose(np.asarray(o_wide), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_decode_ignores_stale_table_entries():

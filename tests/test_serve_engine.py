@@ -82,9 +82,10 @@ def test_engine_midstream_admission_slot_reuse():
 
 def test_greedy_generate_counts_and_parity():
     """steps new tokens from exactly one prefill (whose logits supply the
-    first token — no second train-mode forward) + steps-1 decodes, and
-    the stream equals the train-mode greedy rollout (off-by-one fixed:
-    the final decoded token lands)."""
+    first token — no second train-mode forward) + steps-1 decode
+    iterations grouped into budget-bounded supersteps, and the stream
+    equals the train-mode greedy rollout (off-by-one fixed: the final
+    decoded token lands)."""
     cfg, params = _setup("qwen2-0.5b")
     prompt = jax.random.randint(jax.random.PRNGKey(2), (3, 7), 0,
                                 cfg.vocab_size)
@@ -94,16 +95,30 @@ def test_greedy_generate_counts_and_parity():
     np.testing.assert_array_equal(np.asarray(out),
                                   _rollout(params, cfg, prompt, steps))
 
-    # call counts, via the engine greedy_generate drives
+    # call counts, via the engine greedy_generate drives: equal budgets
+    # mean K = steps-1 fits one superstep — 2 host syncs for the whole
+    # batch (prefill + one superstep boundary), not one per token
     ccfg = PagedCacheConfig(num_slots=3, page_size=8, num_pages=3 * 2 + 1,
                             max_pages_per_seq=2)
-    eng = ServeEngine(params, cfg, ccfg)
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=8)
     rids = [eng.submit(np.asarray(prompt[i]), steps) for i in range(3)]
     out2 = eng.run()
     assert eng.stats["prefill_calls"] == 1      # one batched prefill
     assert eng.stats["decode_steps"] == steps - 1
+    assert eng.stats["supersteps"] == 1
+    assert eng.stats["host_syncs"] == 2
     for i, rid in enumerate(rids):
         np.testing.assert_array_equal(out2[rid], np.asarray(out[i, 7:]))
+
+    # capped supersteps: K=2 splits the same stream into ceil(4/2)=2
+    # boundaries without changing a single token
+    eng2 = ServeEngine(params, cfg, ccfg, superstep_k=2)
+    rids2 = [eng2.submit(np.asarray(prompt[i]), steps) for i in range(3)]
+    out3 = eng2.run()
+    assert eng2.stats["supersteps"] == 2
+    assert eng2.stats["decode_steps"] == steps - 1
+    for i, rid in enumerate(rids2):
+        np.testing.assert_array_equal(out3[rid], np.asarray(out[i, 7:]))
 
 
 def test_greedy_generate_single_step_needs_no_decode():
@@ -117,6 +132,7 @@ def test_greedy_generate_single_step_needs_no_decode():
         eng.submit(np.asarray(prompt[i]), 1)
     eng.run()
     assert eng.stats == {"prefill_calls": 1, "decode_steps": 0,
+                         "supersteps": 0, "host_syncs": 1,
                          "admitted": 2, "retired": 2, "table_uploads": 0}
 
 

@@ -1,0 +1,166 @@
+"""Decode supersteps (ISSUE 5): the device-resident K-iteration scan must
+be a pure perf transform — token streams identical to the ``superstep_k=1``
+host-driven conformance path for mixed-length batches with staggered
+retirement, across the GQA and MLA arch families; the scheduler's K is
+budget-bounded (no speculative over-generation); the host is consulted
+O(1/K) times per token; and the cached device mirrors stay exact when the
+length bumps happen inside the scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.model import init_model
+from repro.serve import PagedCacheConfig, ServeEngine
+from repro.serve.kv_cache import PagedCacheConfig as _CC
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _setup(arch, seed=0, max_pos=64):
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(seed), cfg, max_pos=max_pos)
+    return cfg, params
+
+
+def _workload(cfg, seed=3):
+    """Mixed prompt lengths AND budgets on a 2-slot engine: retirements
+    stagger, so supersteps of every length down to 1 occur and admissions
+    interleave with in-flight decodes."""
+    rng = np.random.default_rng(seed)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab_size, s), np.int32)
+               for s in (5, 9, 3, 6)]
+    budgets = [4, 7, 2, 5]
+    return prompts, budgets
+
+
+def _run(params, cfg, prompts, budgets, k):
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=24,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=k)
+    rids = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+    out = eng.run()
+    return eng, {rid: out[rid] for rid in rids}
+
+
+# -- token parity vs the superstep_k=1 conformance path -----------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "deepseek-v2-236b"])
+def test_superstep_matches_singlestep(arch):
+    cfg, params = _setup(arch)
+    prompts, budgets = _workload(cfg)
+    ref_eng, ref = _run(params, cfg, prompts, budgets, k=1)
+    assert ref_eng.stats["supersteps"] == ref_eng.stats["decode_steps"]
+    for k in (4, 8):
+        eng, out = _run(params, cfg, prompts, budgets, k=k)
+        for rid, toks in ref.items():
+            np.testing.assert_array_equal(out[rid], toks)
+        # exact budgets: the budget-bounded K can never over-generate
+        for rid, n in zip(out, budgets):
+            assert len(out[rid]) == n
+        # same total decode work, fewer boundaries
+        assert eng.stats["supersteps"] < eng.stats["decode_steps"]
+        assert eng.kv.alloc.n_used == 0          # drained clean
+
+
+def test_superstep_host_syncs_scale_inverse_k():
+    """Drained mixed-length workload: host syncs per token fall ~1/K
+    (the acceptance-criteria counter, DESIGN.md §12). Budgets are large
+    enough that K isn't pinned by a nearly-done slot — with tiny mixed
+    budgets the bound K = min(remaining) is the cost of never
+    over-generating."""
+    cfg, params = _setup("qwen2-0.5b")
+    prompts, _ = _workload(cfg)
+    budgets = [17, 17, 17, 17]
+    e1, out1 = _run(params, cfg, prompts, budgets, k=1)
+    e8, out8 = _run(params, cfg, prompts, budgets, k=8)
+    for rid in out1:
+        np.testing.assert_array_equal(out8[rid], out1[rid])
+    tokens = sum(budgets)
+    # K=1 pays >= one sync per decoded token (plus prefills)
+    assert e1.stats["host_syncs"] >= e1.stats["decode_steps"]
+    # the superstep path amortizes boundaries over whole budget chunks
+    assert e8.stats["host_syncs"] * 3 <= e1.stats["host_syncs"]
+    assert e8.stats["host_syncs"] / tokens <= 1 / 8 + 0.05
+
+
+def test_superstep_midstream_admission():
+    """A request submitted between supersteps lands in a freed slot and
+    its stream is unchanged vs the per-token engine."""
+    cfg, params = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(7)
+    p1 = np.asarray(rng.integers(0, cfg.vocab_size, 6), np.int32)
+    p2 = np.asarray(rng.integers(0, cfg.vocab_size, 4), np.int32)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    outs = {}
+    for k in (1, 8):
+        eng = ServeEngine(params, cfg, ccfg, superstep_k=k)
+        r1 = eng.submit(p1, 5)
+        eng.step()
+        r2 = eng.submit(p2, 4)               # arrives mid-stream
+        out = eng.run()
+        outs[k] = (out[r1], out[r2])
+        assert eng.sched.finished[r2].slot == eng.sched.finished[r1].slot
+    np.testing.assert_array_equal(outs[1][0], outs[8][0])
+    np.testing.assert_array_equal(outs[1][1], outs[8][1])
+
+
+# -- scheduler K choice -------------------------------------------------
+
+
+def test_scheduler_superstep_k_budget_bounded():
+    sched = Scheduler(_CC(num_slots=4, page_size=4, num_pages=32,
+                          max_pages_per_seq=8))
+    sched.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=9))
+    sched.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=3))
+    sched.admissions(free_pages=32)
+    # both just prefilled: one token each already generated
+    for st in sched.active.values():
+        st.generated.append(0)
+    assert sched.superstep_k(cap=8) == 2     # min remaining = 3 - 1
+    assert sched.superstep_k(cap=1) == 1     # cap dominates
+    sched.active[0].generated.extend([0] * 7)   # rid 0: 8 of 9 done
+    assert sched.superstep_k(cap=8) == 1
+    with pytest.raises(ValueError):
+        sched.superstep_k(cap=0)
+    sched2 = Scheduler(_CC())
+    assert sched2.superstep_k(cap=8) == 0    # nothing active
+
+
+# -- device mirrors stay exact across in-scan length bumps --------------
+
+
+def test_superstep_keeps_lens_mirror_exact():
+    cfg, params = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(11)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab_size, s), np.int32)
+               for s in (5, 7)]
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=4)
+    for p in prompts:
+        eng.submit(p, 6)
+    uploads_before = None
+    while not eng.sched.idle:
+        eng.step()
+        if eng.sched.active:         # mid-run: mirrors must track exactly
+            np.testing.assert_array_equal(np.asarray(eng.kv.kv_lens_dev),
+                                          eng.kv.kv_lens)
+            np.testing.assert_array_equal(np.asarray(eng.kv.page_table_dev),
+                                          eng.kv.page_table)
+            if uploads_before is None:
+                # steady decode stream: no further uploads until an
+                # occupancy change (commit_tokens adopts the scan carry)
+                uploads_before = eng.kv.table_uploads
+            elif eng.stats["retired"] == 0:
+                assert eng.kv.table_uploads == uploads_before
+
+
+def test_rejects_bad_superstep_k():
+    cfg, params = _setup("qwen2-0.5b")
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, PagedCacheConfig(), superstep_k=0)
