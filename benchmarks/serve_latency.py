@@ -15,9 +15,18 @@ Two measurements:
    writes the K x arch sweep to BENCH_serve.json (the serving analogue of
    BENCH_agg.json), including the host_syncs-per-token figure and a
    token-parity check of every K against the K=1 conformance path.
+3. ``serve/prefix`` — the DESIGN.md §13 prefix cache under a flash-crowd
+   workload: a burst of requests sharing one long system-prompt prefix
+   (``prefix_mix_requests``) drained once on the FIFO/no-cache baseline
+   and once with ``prefix_cache="on"`` + the SLA policy. Reported per
+   share mix (0%, 50%, 90%): p99 TTFT (wall seconds submit -> first
+   token, queueing included) for both engines, the speedup, cached tok/s
+   and the cache hit rate — with a token-parity check of every cached
+   stream against the baseline. The cache is reset before each timed
+   pass so the measurement always starts cold.
 
     PYTHONPATH=src python benchmarks/serve_latency.py \
-        [--smoke] [--superstep-k K] [--record]
+        [--smoke] [--superstep-k K] [--prefix-share S] [--record]
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ N_REPLICAS = 10
 
 RECORD_ARCHS = ("qwen2-0.5b", "deepseek-v2-236b")
 RECORD_KS = (1, 4, 8, 16)
+PREFIX_SHARES = (0.0, 0.5, 0.9)
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serve.json"
 
@@ -149,7 +159,100 @@ def run_engine_sweep(n_requests: int = 8, seed: int = 0,
     return rows
 
 
-def record(rows_dispatch, rows_engine, engine_requests: int,
+def _drain_ttft(engine, reqs, new_tokens: int):
+    """Submit a burst, drain it, and report per-request TTFT.
+
+    Every request is submitted before the drain starts, so TTFT folds in
+    the queueing delay behind slower admissions — exactly the tail the
+    prefix cache is supposed to cut."""
+    base = dict(engine.stats)
+    rids = [engine.submit(p, new_tokens) for p in reqs]
+    t0 = time.time()
+    out = engine.run()
+    wall = time.time() - t0
+    ttfts = np.asarray([engine.sched.finished[r].ttft for r in rids])
+    return out, rids, wall, ttfts, base
+
+
+def run_prefix(share: float, n_requests: int = 16, seed: int = 0,
+               arch: str = "qwen2-0.5b", prefix_len: int = 152,
+               suffix_len: int = 4, new_tokens: int = 6,
+               repeats: int = 2):
+    """Flash-crowd comparison at one prefix-share mix: FIFO/no-cache
+    baseline vs prefix_cache="on" + SLA policy over the identical
+    ``prefix_mix_requests`` burst. Both engines are warmed on the same
+    workload first; the cached engine's index is reset before every
+    timed pass so hits are earned inside the measurement, not inherited
+    from warmup. Streams must match token-for-token."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.model import init_model
+    from repro.serve import PagedCacheConfig, ServeEngine
+    from repro.serve.dispatch import prefix_mix_requests
+
+    cfg = get_config(arch).reduced()
+    total = prefix_len + suffix_len + new_tokens
+    params = init_model(jax.random.PRNGKey(seed), cfg, max_pos=2 * total)
+    ccfg = PagedCacheConfig(
+        num_slots=2, page_size=8,
+        num_pages=96, max_pages_per_seq=(total + 7) // 8 + 1)
+    reqs = prefix_mix_requests(n_requests, share, prefix_len=prefix_len,
+                               suffix_len=suffix_len, vocab=cfg.vocab_size,
+                               seed=seed)
+
+    base_eng = ServeEngine(params, cfg, ccfg, superstep_k=8)
+    hit_eng = ServeEngine(params, cfg, ccfg, superstep_k=8,
+                          prefix_cache="on", policy="sla")
+    for eng in (base_eng, hit_eng):         # compile prefill buckets + K
+        _drain_ttft(eng, reqs, new_tokens)
+
+    best = {}
+    for eng, tag in ((base_eng, "base"), (hit_eng, "cached")):
+        for _ in range(max(repeats, 1)):
+            if tag == "cached":
+                eng.reset_prefix_cache()     # timed pass starts cold
+            out, rids, wall, ttfts, stats0 = _drain_ttft(
+                eng, reqs, new_tokens)
+            p99 = tail_latency(ttfts, 99)
+            if tag not in best or p99 < best[tag]["p99_ttft"]:
+                best[tag] = dict(
+                    p99_ttft=p99, p50_ttft=tail_latency(ttfts, 50),
+                    wall_s=wall,
+                    tok_s=n_requests * new_tokens / max(wall, 1e-9),
+                    out=[out[r] for r in rids], stats0=stats0, eng=eng)
+
+    b, c = best["base"], best["cached"]
+    eng, stats0 = c.pop("eng"), c.pop("stats0")
+    b.pop("eng"), b.pop("stats0")
+    hit = eng.stats["cache_hit_tokens"] - stats0["cache_hit_tokens"]
+    miss = eng.stats["cache_miss_tokens"] - stats0["cache_miss_tokens"]
+    match = all(np.array_equal(x, y)
+                for x, y in zip(b.pop("out"), c.pop("out")))
+    return dict(
+        share=share, arch=arch, n_requests=n_requests,
+        prefix_len=prefix_len, suffix_len=suffix_len,
+        new_tokens=new_tokens, base=b, cached=c,
+        speedup_p99_ttft=b["p99_ttft"] / max(c["p99_ttft"], 1e-9),
+        hit_rate=hit / max(hit + miss, 1), match=match)
+
+
+def run_prefix_sweep(n_requests: int = 16, seed: int = 0,
+                     repeats: int = 2):
+    return [run_prefix(s, n_requests=n_requests, seed=seed,
+                       repeats=repeats) for s in PREFIX_SHARES]
+
+
+def _print_prefix(row) -> None:
+    print(f"serve/prefix_share{int(row['share'] * 100)},"
+          f"{row['cached']['wall_s'] * 1e6:.0f},"
+          f"p99_ttft_base={row['base']['p99_ttft'] * 1e3:.1f}ms;"
+          f"p99_ttft_cached={row['cached']['p99_ttft'] * 1e3:.1f}ms;"
+          f"x_p99_ttft={row['speedup_p99_ttft']:.2f};"
+          f"cached_tok_s={row['cached']['tok_s']:.1f};"
+          f"hit_rate={row['hit_rate']:.2f};match={int(row['match'])}")
+
+
+def record(rows_dispatch, rows_engine, rows_prefix, engine_requests: int,
            smoke: bool) -> None:
     import jax
     payload = {
@@ -159,12 +262,16 @@ def record(rows_dispatch, rows_engine, engine_requests: int,
             "superstep_ks": list(RECORD_KS),
             "engine_requests": engine_requests,
             "smoke": smoke,      # a reduced sweep must be visibly reduced
+            "prefix_shares": list(PREFIX_SHARES),
             "note": "reduced() registry archs; warmed jit; tok/s is a "
-                    "drained mixed-length workload (DESIGN.md §12)",
+                    "drained mixed-length workload (DESIGN.md §12); "
+                    "prefix rows are cold-cache flash-crowd TTFT "
+                    "(DESIGN.md §13)",
         },
         "dispatch": [{k: v for k, v in r.items()} for r in rows_dispatch],
         "engine": [{k: v for k, v in r.items() if k != "generated"}
                    for r in rows_engine],
+        "prefix": rows_prefix,
     }
     # a reduced sweep must never clobber the committed full baseline
     path = BENCH_PATH.with_suffix(".smoke.json") if smoke else BENCH_PATH
@@ -174,7 +281,15 @@ def record(rows_dispatch, rows_engine, engine_requests: int,
 
 def main(n_requests: int = 2000, engine_requests: int = 8,
          superstep_k: int = 8, do_record: bool = False,
-         smoke: bool = False):
+         smoke: bool = False, prefix_share: float | None = None):
+    if prefix_share is not None and not do_record:
+        # the §13 comparison alone (CI stage 8 runs this under --smoke)
+        row = run_prefix(prefix_share,
+                         n_requests=6 if smoke else 16,
+                         repeats=1 if smoke else 2)
+        _print_prefix(row)
+        assert row["match"], "cached streams diverged from baseline"
+        return
     rows_dispatch = run_dispatch(n_requests)
     for row in rows_dispatch:
         print(f"serve/dispatch_r{row['r']},{row['wall_s'] * 1e6:.0f},"
@@ -189,7 +304,12 @@ def main(n_requests: int = 2000, engine_requests: int = 8,
                   f"x_vs_k1={row['speedup_vs_k1']:.2f};"
                   f"syncs_per_tok={row['syncs_per_token']:.3f};"
                   f"match={int(row['match'])}")
-        record(rows_dispatch, rows_engine, engine_requests, smoke)
+        rows_prefix = run_prefix_sweep(n_requests=6 if smoke else 16,
+                                       repeats=1 if smoke else 2)
+        for row in rows_prefix:
+            _print_prefix(row)
+        record(rows_dispatch, rows_engine, rows_prefix, engine_requests,
+               smoke)
         return
     row = run_engine(engine_requests, superstep_k=superstep_k)
     print(f"serve/engine_{row['arch']}_k{row['superstep_k']},"
@@ -209,10 +329,14 @@ if __name__ == "__main__":
     ap.add_argument("--record", action="store_true",
                     help="run the K x arch sweep and commit "
                          "BENCH_serve.json")
+    ap.add_argument("--prefix-share", type=float, default=None,
+                    help="run only the §13 prefix-cache comparison at "
+                         "this share mix (e.g. 0.9)")
     args = ap.parse_args()
     if args.smoke:
         main(n_requests=200, engine_requests=3,
              superstep_k=args.superstep_k, do_record=args.record,
-             smoke=True)
+             smoke=True, prefix_share=args.prefix_share)
     else:
-        main(superstep_k=args.superstep_k, do_record=args.record)
+        main(superstep_k=args.superstep_k, do_record=args.record,
+             prefix_share=args.prefix_share)

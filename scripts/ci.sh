@@ -22,6 +22,10 @@
 #          flash-decode kernel against its oracle (interpret mode) and
 #          the decode-superstep engine against the superstep_k=1
 #          conformance loop, then the serving benchmark smoke at K=8.
+# Stage 8: prefix cache + preemption (DESIGN.md §13) — cached-admission
+#          token parity, refcount/COW/swap property fuzz, the SLA
+#          scheduler suite, then the flash-crowd prefix benchmark smoke
+#          at a 90% share mix (asserts cached streams == baseline).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,5 +59,11 @@ JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_decode.py \
     tests/test_serve_superstep.py
 JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/serve_latency.py \
     --smoke --superstep-k 8
+
+echo "== stage 8: prefix cache + SLA preemption =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_serve_prefix.py \
+    tests/test_property_kvcache.py tests/test_serve_sched.py
+JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/serve_latency.py \
+    --smoke --prefix-share 0.9
 
 echo "CI OK"

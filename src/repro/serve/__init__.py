@@ -1,25 +1,33 @@
 """repro.serve — the redundancy-aware serving subsystem.
 
-Layers (DESIGN.md §9):
+Layers (DESIGN.md §9, §13):
 
 - ``kv_cache``  paged KV/SSM cache: fixed-size pages, per-request page
-                tables, alloc/free on admission/eviction.
+                tables, refcounted alloc/share/release on
+                admission/eviction, swap-to-host for preemption.
+- ``prefix``    content-hashed shared-KV prefix cache: block-level index
+                over page-aligned token chunks, COW forks, LRU eviction
+                of refcount-0 cached pages.
 - ``scheduler`` continuous batching: admit/prefill/decode/retire queues,
-                slot reuse across requests of different lengths.
+                slot reuse across requests of different lengths; ``fifo``
+                and SLA-aware (priority + TTFT deadline) policies with
+                preemption.
 - ``engine``    model-coupled serving loop over the paged cache.
 - ``dispatch``  the paper's first-(n-r) waiting rule (Algorithm 1)
                 applied to replicated inference, with Byzantine-replica
                 majority vote.
 """
 from repro.serve.kv_cache import (PageAllocator, PagedCacheConfig,
-                                  PagedKVCache, pages_needed)
+                                  PagedKVCache, SwapState, pages_needed)
+from repro.serve.prefix import PrefixIndex, PrefixPlan, chunk_hashes
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.engine import ServeEngine
 from repro.serve.dispatch import (DispatchConfig, DispatchResult,
                                   RedundantDispatcher)
 
 __all__ = [
-    "PageAllocator", "PagedCacheConfig", "PagedKVCache", "pages_needed",
+    "PageAllocator", "PagedCacheConfig", "PagedKVCache", "SwapState",
+    "pages_needed", "PrefixIndex", "PrefixPlan", "chunk_hashes",
     "Request", "RequestState", "Scheduler", "ServeEngine",
     "DispatchConfig", "DispatchResult", "RedundantDispatcher",
 ]

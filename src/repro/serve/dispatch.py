@@ -167,3 +167,26 @@ def honest_tokens(request: np.ndarray, length: int = 12) -> np.ndarray:
     so token parity means the same thing at every layer."""
     rng = np.random.default_rng(int(np.sum(request)) % (2 ** 31))
     return rng.integers(0, 256, length).astype(np.int32)
+
+
+def prefix_mix_requests(n: int, share: float, prefix_len: int = 24,
+                        suffix_len: int = 8, vocab: int = 256,
+                        seed: int = 0, rng=None):
+    """Shared-prefix request mix (DESIGN.md §13): with probability
+    ``share`` a request is the workload's common prefix plus a fresh
+    suffix — a flash crowd hitting the same system prompt / few-shot
+    preamble — otherwise it is fully unique. The canonical workload for
+    the prefix-cache benchmark and the ``flash_crowd_prefix`` scenario:
+    at ``share=0`` every prompt is cold, at ``share=0.9`` the request
+    stream itself carries the redundancy the cache exploits."""
+    rng = np.random.default_rng(seed) if rng is None else rng
+    prefix = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    out = []
+    for _ in range(n):
+        if rng.random() < share:
+            out.append(np.concatenate(
+                [prefix, rng.integers(0, vocab, suffix_len).astype(np.int32)]))
+        else:
+            out.append(rng.integers(0, vocab,
+                                    prefix_len + suffix_len).astype(np.int32))
+    return out

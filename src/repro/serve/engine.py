@@ -32,6 +32,7 @@ batch — continuous batching must be batch-composition-invariant.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -40,19 +41,32 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.model import apply_model
-from repro.serve.kv_cache import PagedCacheConfig, PagedKVCache
+from repro.serve.kv_cache import (PagedCacheConfig, PagedKVCache,
+                                  pages_needed)
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig,
                  ccfg: Optional[PagedCacheConfig] = None,
-                 superstep_k: int = 8):
+                 superstep_k: int = 8, prefix_cache: str = "off",
+                 policy: str = "fifo"):
         if superstep_k < 1:
             raise ValueError(f"need superstep_k >= 1, got {superstep_k}")
+        if prefix_cache not in ("off", "on"):
+            raise ValueError(f"prefix_cache must be off|on, "
+                             f"got {prefix_cache!r}")
+        if prefix_cache == "on" and any(k != "attn"
+                                        for k in cfg.layer_pattern):
+            # only attention KV is paged; a recurrent layer's state is not
+            # content-addressable per token chunk, so prefix reuse cannot
+            # reconstruct it
+            raise ValueError(
+                "prefix_cache requires an attention-only layer pattern")
         self.params = params
         self.cfg = cfg
         self.superstep_k = int(superstep_k)
+        self.prefix_cache = prefix_cache
         if cfg.moe is not None:
             cfg = dataclasses.replace(
                 cfg, moe=dataclasses.replace(
@@ -61,14 +75,19 @@ class ServeEngine:
                     / cfg.moe.top_k))
         self.infer_cfg = cfg
         self.ccfg = ccfg or PagedCacheConfig()
-        self.kv = PagedKVCache(cfg, self.ccfg)
-        self.sched = Scheduler(self.ccfg)
+        self.kv = PagedKVCache(cfg, self.ccfg,
+                               enable_prefix=(prefix_cache == "on"))
+        self.sched = Scheduler(self.ccfg, policy=policy)
         # host_syncs counts device->host materializations (one per prefill
         # group + one per superstep boundary): the drained-workload figure
         # of merit is host_syncs / tokens ~ O(1/K) (DESIGN.md §12)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
                       "supersteps": 0, "host_syncs": 0,
-                      "admitted": 0, "retired": 0, "table_uploads": 0}
+                      "admitted": 0, "retired": 0, "table_uploads": 0,
+                      "cache_hit_tokens": 0, "cache_miss_tokens": 0,
+                      "suffix_steps": 0, "preemptions": 0, "resumed": 0,
+                      "swapped_pages": 0, "cow_forks": 0,
+                      "prefix_evictions": 0}
         self._next_rid = 0
 
         def _prefill(params, tokens):
@@ -128,33 +147,64 @@ class ServeEngine:
                                 for k in self.infer_cfg.layer_pattern)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> int:
+    def submit(self, prompt, max_new_tokens: int, priority: int = 0,
+               deadline: Optional[float] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError("need max_new_tokens >= 1")
-        total = prompt.size + max_new_tokens
-        cap = (self.ccfg.num_pages - 1) * self.ccfg.page_size
-        if total > min(cap, self.ccfg.max_seq_len):
-            raise ValueError(f"request of {total} tokens exceeds cache "
-                             f"capacity {min(cap, self.ccfg.max_seq_len)}")
         rid = self._next_rid
         self._next_rid += 1
+        # an over-capacity request lands in sched.rejected (with reason)
+        # instead of raising — one bad request must not kill the stream
         self.sched.submit(Request(rid=rid, prompt=prompt,
-                                  max_new_tokens=max_new_tokens))
+                                  max_new_tokens=max_new_tokens,
+                                  priority=priority, deadline=deadline))
         return rid
 
+    @property
+    def rejected(self):
+        """(Request, reason) pairs refused at submit (over-capacity)."""
+        return self.sched.rejected
+
     # ------------------------------------------------------------------
+    def _need_pages(self, st: RequestState) -> int:
+        """Page bill for the admission gate: a prefix-cache hit only pays
+        for its uncached pages (plus a COW copy); swaps and cold requests
+        pay the full conservative reservation."""
+        if st.swap is None and self.kv.prefix is not None:
+            return self.kv.prefix.plan(st.req.prompt,
+                                       st.req.total_len).need_pages
+        return pages_needed(st.req.total_len, self.ccfg.page_size)
+
     def _admit(self) -> None:
-        admitted = self.sched.admissions(self.kv.alloc.n_free)
+        admitted = self.sched.admissions(self.kv.available_pages,
+                                         need_pages=self._need_pages)
         if not admitted:
             if not self.sched.active and self.sched.waiting:
                 raise RuntimeError(
                     "head request can never be admitted (page pool too "
                     "small even when idle)")
             return
-        self.stats["admitted"] += len(admitted)
+        fresh = [st for st in admitted if st.swap is None]
+        resumed = [st for st in admitted if st.swap is not None]
+        for st in resumed:
+            self._resume(st)
+        self.stats["admitted"] += len(fresh)
+        if fresh:
+            if self.kv.prefix is None:
+                self._admit_grouped(fresh)
+            else:
+                for st in fresh:
+                    self._admit_prefix(st)
+        # keep the counter live for prefill-only workloads too — step()
+        # may never reach a decode that would otherwise refresh it
+        self.stats["table_uploads"] = self.kv.table_uploads
+
+    def _admit_grouped(self, admitted: List[RequestState]) -> None:
+        """The conformance admission path (prefix_cache="off"): batched
+        prefill per padded prompt-length group, verbatim pre-§13."""
         ps = self.ccfg.page_size
         groups: Dict[int, List[RequestState]] = {}
         for st in admitted:
@@ -175,28 +225,142 @@ class ServeEngine:
                 # admit() scatters only the first s0 tokens of each page,
                 # so the causal-invisible right-pad never enters the cache
                 self.kv.admit(st.slot, one, s0, st.req.total_len)
-                st.pending = int(first[i, s0 - 1])
-                st.generated.append(st.pending)
-                if st.done:         # max_new_tokens == 1: no decode needed
-                    self._retire(st.slot)
-        # keep the counter live for prefill-only workloads too — step()
-        # may never reach a decode that would otherwise refresh it
-        self.stats["table_uploads"] = self.kv.table_uploads
+                self._first_token(st, int(first[i, s0 - 1]))
+
+    def _admit_prefix(self, st: RequestState) -> None:
+        """Prefix-cache admission: share the resident prompt prefix,
+        prefill only the uncached suffix, then index this request's own
+        blocks for the next arrival. Token streams stay identical to cold
+        prefill — the decode program recomputes exactly the KV and logits
+        prefill would have produced at those positions."""
+        req = st.req
+        plan = self.kv.prefix.plan(req.prompt, req.total_len)
+        if plan.cached_len == 0:
+            # cold miss: single-request prefill, then index its blocks
+            ps = self.ccfg.page_size
+            if pages_needed(req.total_len, ps) > self.kv.available_pages:
+                self.sched.requeue(st)   # gate-time plan went stale
+                return
+            s0 = req.prompt_len
+            bucket = -(-s0 // ps) * ps if self._pad_buckets else s0
+            prompts = np.zeros((1, bucket), np.int32)
+            prompts[0, :s0] = req.prompt
+            first, cache = self._prefill(self.params, jnp.asarray(prompts))
+            self.stats["prefill_calls"] += 1
+            first = np.asarray(first)
+            self.stats["host_syncs"] += 1
+            one = jax.tree.map(lambda l: l[:, 0:1], cache)
+            self.kv.admit(st.slot, one, s0, req.total_len)
+            self.kv.register_prompt(st.slot, req.prompt)
+            self.stats["cache_miss_tokens"] += s0
+            self._first_token(st, int(first[0, s0 - 1]))
+            return
+        try:
+            self.kv.admit_shared(st.slot, plan, req.total_len)
+        except MemoryError:
+            self.sched.requeue(st)       # gate-time plan went stale
+            return
+        self.stats["cache_hit_tokens"] += plan.cached_len
+        self.stats["cache_miss_tokens"] += req.prompt_len - plan.cached_len
+        first = self._feed_suffix(st.slot, req.prompt[plan.cached_len:])
+        self.kv.register_prompt(st.slot, req.prompt)
+        self._first_token(st, first)
+
+    def _feed_suffix(self, slot: int, suffix) -> int:
+        """Prefill the uncached suffix through the decode program, one
+        token per iteration at position ``kv_lens[slot]``.
+
+        The page table is masked to this slot (other rows point at the
+        null page with length 0) so co-resident requests are untouched,
+        and the program is the same jitted ``_decode`` the steady loop
+        runs — no new compilation shapes. The final suffix token's logits
+        give the first generated token, the same position cold prefill
+        reads them from.
+        """
+        B = self.ccfg.num_slots
+        tbl = np.zeros_like(self.kv.page_table)
+        tbl[slot] = self.kv.page_table[slot]
+        tbl_dev = jnp.asarray(tbl)
+        nxt = None
+        for t in np.asarray(suffix, np.int32):
+            toks = np.zeros((B, 1), np.int32)
+            toks[slot, 0] = int(t)
+            lens = np.zeros((B,), np.int32)
+            lens[slot] = self.kv.kv_lens[slot]
+            nxt, new_cache = self._decode(
+                self.params, jnp.asarray(toks), self.kv.cache,
+                jnp.asarray(lens), tbl_dev)
+            self.kv.update(new_cache)
+            self.kv.note_host_len(slot, int(self.kv.kv_lens[slot]) + 1)
+            self.stats["suffix_steps"] += 1
+        self.stats["host_syncs"] += 1
+        return int(np.asarray(nxt)[slot])
+
+    def _first_token(self, st: RequestState, tok: int) -> None:
+        st.pending = tok
+        st.generated.append(tok)
+        if st.ttft is None:
+            st.ttft = time.monotonic() - st.t_submit
+        if st.done:             # max_new_tokens == 1: no decode needed
+            self._retire(st.slot)
+
+    def _resume(self, st: RequestState) -> None:
+        """Swap a preempted request back in; its pending token and
+        generated stream survived on the host, so decode continues
+        exactly where it stopped."""
+        try:
+            self.kv.swap_in(st.slot, st.swap, st.req.prompt,
+                            st.req.total_len)
+        except MemoryError:
+            self.sched.requeue(st)
+            return
+        st.swap = None
+        self.stats["resumed"] += 1
+
+    def _preempt(self) -> None:
+        """SLA rescue: while a strictly higher-priority request starves
+        in the queue, swap the worst-scored active request's KV to host
+        and hand its slot/pages over (bounded by the active count — each
+        iteration preempts one victim, so no livelock)."""
+        guard = len(self.sched.active)
+        while guard > 0:
+            slot = self.sched.preemption_victim()
+            if slot is None:
+                return
+            st = self.sched.active[slot]
+            st.swap = self.kv.swap_out(slot)
+            self.sched.preempt(slot)
+            self.stats["preemptions"] += 1
+            self._admit()
+            guard -= 1
 
     def _retire(self, slot: int) -> None:
         self.kv.evict(slot)
         self.sched.retire(slot)
         self.stats["retired"] += 1
 
+    def reset_prefix_cache(self) -> None:
+        """Drop every index entry and reclaim parked pages (benchmarks:
+        cold-cache timing with a warm jit)."""
+        if self.kv.prefix is not None:
+            self.kv.prefix.clear()
+
     def step(self) -> None:
-        """One serving step: admit -> decode superstep -> commit/retire.
+        """One serving step: admit -> preempt (sla) -> decode superstep
+        -> commit/retire.
 
         ``superstep_k == 1`` runs the original host-driven per-token loop
         verbatim (the bit-exact conformance path); ``superstep_k > 1``
         runs K budget-bounded decode iterations in one jitted scan and
         talks to the host once at the boundary.
         """
+        self.sched.clock += 1.0
         self._admit()
+        self._preempt()
+        self.stats["cow_forks"] = self.kv.cow_forks
+        self.stats["swapped_pages"] = self.kv.swapped_pages
+        if self.kv.prefix is not None:
+            self.stats["prefix_evictions"] = self.kv.prefix.evictions
         if not self.sched.active:
             return
         if self.superstep_k == 1:

@@ -59,7 +59,16 @@ def pages_needed(total_len: int, page_size: int) -> int:
 class PageAllocator:
     """Free-list allocator over physical pages 1..num_pages-1 (page 0 is
     the reserved null page). Alloc/free are O(n) and checked: a page is
-    never handed out twice, never freed twice, never freed while free."""
+    never handed out twice, never freed twice, never freed while free.
+
+    Pages are refcounted for the prefix cache (DESIGN.md §13):
+    ``alloc`` hands a page out at refcount 1, ``share`` adds holders,
+    ``release`` drops one — a page reaching refcount 0 stays *used*
+    (its content may be cached) until someone calls ``free``, which
+    refuses while other holders remain (refcount > 1). Without the
+    prefix cache every page simply lives at refcount 1, and alloc/free
+    behave exactly as before.
+    """
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -67,6 +76,7 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._used: set = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -76,19 +86,50 @@ class PageAllocator:
     def n_used(self) -> int:
         return len(self._used)
 
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise MemoryError(
                 f"page pool exhausted: want {n}, have {len(self._free)}")
         pages = [self._free.pop() for _ in range(n)]
         self._used.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
+
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one holder per page (a cached refcount-0 page revives)."""
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"cannot share unallocated page {p}")
+            self._ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> List[int]:
+        """Drop one holder per page; returns the pages that reached
+        refcount 0. Those stay *used* — the caller decides whether their
+        content is cache-worthy (park) or dead (``free``)."""
+        zero: List[int] = []
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"cannot release unallocated page {p}")
+            if self._ref[p] <= 0:
+                raise ValueError(f"release of unreferenced page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                zero.append(p)
+        return zero
 
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
             if p not in self._used:
                 raise ValueError(f"double free / foreign page {p}")
+            if self._ref[p] > 1:
+                raise ValueError(
+                    f"page {p} still shared (refcount {self._ref[p]})")
             self._used.remove(p)
+            del self._ref[p]
             self._free.append(p)
 
     def check_invariants(self) -> bool:
@@ -97,7 +138,27 @@ class PageAllocator:
         assert not (seen & self._used), "page both free and used"
         assert 0 not in seen and 0 not in self._used, "null page leaked"
         assert len(seen) + len(self._used) == self.num_pages - 1
+        assert set(self._ref) == self._used, "refcounts out of sync"
+        assert all(c >= 0 for c in self._ref.values()), "negative refcount"
         return True
+
+
+@dataclasses.dataclass
+class SwapState:
+    """Host image of a preempted request's device state (DESIGN.md §13).
+
+    ``leaf_pages`` holds, per attention pattern position and paged leaf
+    name, the ``(P, n_pages, PS, ...)`` slice of the pool covering the
+    request's *content-bearing* logical pages (``pages_needed(kv_len)``
+    of them — the conservatively reserved trailing pages carry nothing
+    and are re-allocated fresh on resume). ``slot_rows`` holds the
+    recurrent layers' per-slot state rows. Arrays are numpy (host
+    memory): a swapped-out request owns zero device pages.
+    """
+    kv_len: int
+    n_pages: int
+    leaf_pages: Dict[Any, np.ndarray]
+    slot_rows: Dict[Any, np.ndarray]
 
 
 def _paged_block(cfg: ArchConfig, ccfg: PagedCacheConfig, dt):
@@ -125,13 +186,20 @@ class PagedKVCache:
     bookkeeping and scatter/clear device pages.
     """
 
-    def __init__(self, cfg: ArchConfig, ccfg: PagedCacheConfig):
+    def __init__(self, cfg: ArchConfig, ccfg: PagedCacheConfig,
+                 enable_prefix: bool = False):
         if cfg.encoder_decoder:
             raise NotImplementedError(
                 "paged serving supports decoder-only archs")
         self.cfg = cfg
         self.ccfg = ccfg
         self.alloc = PageAllocator(ccfg.num_pages)
+        self.prefix = None
+        if enable_prefix:
+            from repro.serve.prefix import PrefixIndex
+            self.prefix = PrefixIndex(self.alloc, ccfg.page_size)
+        self.cow_forks = 0
+        self.swapped_pages = 0
         S = ccfg.num_slots
         self.page_table = np.zeros((S, ccfg.max_pages_per_seq), np.int32)
         self.kv_lens = np.zeros((S,), np.int32)
@@ -191,10 +259,27 @@ class PagedKVCache:
         self.cache = new_cache
 
     # -- admission / eviction --------------------------------------------
+    @property
+    def available_pages(self) -> int:
+        """Pages allocatable right now: the free list plus whatever the
+        prefix LRU would give back under pressure."""
+        n = self.alloc.n_free
+        if self.prefix is not None:
+            n += self.prefix.reclaimable
+        return n
+
     def can_admit(self, total_len: int) -> bool:
         need = pages_needed(total_len, self.ccfg.page_size)
         return (need <= self.ccfg.max_pages_per_seq
-                and need <= self.alloc.n_free)
+                and need <= self.available_pages)
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """alloc() that spills into the prefix LRU: under pool pressure,
+        refcount-0 cached pages are reclaimed (evicting their index
+        entries) before the allocator is allowed to fail."""
+        if self.prefix is not None and n > self.alloc.n_free:
+            self.prefix.reclaim(n - self.alloc.n_free)
+        return self.alloc.alloc(n)
 
     def admit(self, slot: int, prefill_cache, prompt_len: int,
               total_len: int) -> None:
@@ -211,7 +296,7 @@ class PagedKVCache:
                 f"table width {ccfg.max_pages_per_seq}")
         if slot in self._slot_pages:
             raise ValueError(f"slot {slot} already occupied")
-        pages = self.alloc.alloc(need)
+        pages = self._alloc_pages(need)
         self._slot_pages[slot] = pages
         row = np.zeros((ccfg.max_pages_per_seq,), np.int32)
         row[:need] = pages
@@ -219,6 +304,8 @@ class PagedKVCache:
         self.kv_lens[slot] = prompt_len
         self._tables_dirty = True
 
+        n_full = prompt_len // ps
+        full_idx = np.asarray(pages[:n_full], np.int32)
         blocks = list(self.cache)
         for pos, kind in enumerate(self.cfg.layer_pattern):
             blk = dict(blocks[pos])
@@ -227,12 +314,21 @@ class PagedKVCache:
                 mix = dict(blk["mixer"])
                 for name, pool in mix.items():
                     dense = pre["mixer"][name[: -len(PAGED_SUFFIX)]]
-                    # dense: (P, 1, s0, ...); scatter page-by-page
-                    for i in range(pages_needed(prompt_len, ps)):
-                        n = min(ps, prompt_len - i * ps)
-                        chunk = dense[:, 0, i * ps: i * ps + n]
-                        mix[name] = mix[name].at[:, pages[i], :n].set(
-                            chunk.astype(mix[name].dtype))
+                    # dense: (P, 1, s0, ...). One indexed write covers
+                    # every complete page; only the ragged tail (if any)
+                    # needs its own partial-page write.
+                    if n_full:
+                        chunk = dense[:, 0, : n_full * ps]
+                        chunk = chunk.reshape(
+                            chunk.shape[0], n_full, ps, *chunk.shape[2:])
+                        pool = pool.at[:, full_idx].set(
+                            chunk.astype(pool.dtype))
+                    if prompt_len % ps:
+                        tail = dense[:, 0, n_full * ps: prompt_len]
+                        pool = pool.at[:, pages[n_full],
+                                       : prompt_len % ps].set(
+                            tail.astype(pool.dtype))
+                    mix[name] = pool
                 blk["mixer"] = mix
             else:
                 # recurrent state: one row per slot
@@ -248,14 +344,198 @@ class PagedKVCache:
         self.cache = tuple(blocks)
 
     def evict(self, slot: int) -> None:
-        """Free the slot's pages and point its table at the null page."""
+        """Release the slot's pages and point its table at the null page.
+
+        Without the prefix cache this frees outright (the original
+        semantics). With it, each page drops one reference: still-shared
+        pages live on under their other holders, and refcount-0 indexed
+        pages park in the LRU so the next request with the same prefix
+        hits them.
+        """
         pages = self._slot_pages.pop(slot, None)
         if pages is None:
             raise ValueError(f"slot {slot} not occupied")
-        self.alloc.free(pages)
+        if self.prefix is not None:
+            self.prefix.release(pages)
+        else:
+            self.alloc.free(pages)
         self.page_table[slot] = 0
         self.kv_lens[slot] = 0
         self._tables_dirty = True
+
+    # -- prefix-cache admission / COW / swap (DESIGN.md §13) -------------
+    def admit_shared(self, slot: int, plan, total_len: int) -> None:
+        """Admit a request whose prompt prefix is already resident.
+
+        The plan's shared pages become logical pages 0.. of the slot
+        (refcount +1 each); private pages cover the rest of the
+        conservative ``total_len`` reservation. If the plan says ``cow``
+        (full-prompt hit: the engine's re-feed of the last prompt token
+        will write into the final shared page), that page is forked to a
+        private copy *before* any write can happen. Feasibility is
+        checked up front so failure leaves no partial state — the engine
+        requeues on MemoryError.
+        """
+        ccfg = self.ccfg
+        need_total = pages_needed(total_len, ccfg.page_size)
+        if need_total > ccfg.max_pages_per_seq:
+            raise ValueError(
+                f"request of {total_len} tokens needs {need_total} pages "
+                f"> table width {ccfg.max_pages_per_seq}")
+        if slot in self._slot_pages:
+            raise ValueError(f"slot {slot} already occupied")
+        if plan.need_pages > self.prefix.headroom(plan.shared):
+            raise MemoryError(
+                f"page pool exhausted: want {plan.need_pages}, "
+                f"have {self.prefix.headroom(plan.shared)}")
+        self.prefix.acquire(plan.shared)
+        shared = list(plan.shared)
+        priv = self._alloc_pages(plan.need_pages)
+        if plan.cow:
+            copy = priv[0]
+            self._copy_page(shared[-1], copy)
+            self.prefix.release([shared[-1]])    # drop our pin on the orig
+            shared[-1] = copy
+            priv = priv[1:]
+            self.cow_forks += 1
+        pages = shared + priv
+        assert len(pages) == need_total
+        self._slot_pages[slot] = pages
+        row = np.zeros((ccfg.max_pages_per_seq,), np.int32)
+        row[:need_total] = pages
+        self.page_table[slot] = row
+        self.kv_lens[slot] = plan.cached_len
+        self._tables_dirty = True
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """COW fork: copy physical page ``src`` to ``dst`` across every
+        attention leaf of every layer (one page-row copy per pool)."""
+        blocks = list(self.cache)
+        for pos, kind in enumerate(self.cfg.layer_pattern):
+            if kind != "attn":
+                continue
+            blk = dict(blocks[pos])
+            mix = dict(blk["mixer"])
+            for name, pool in mix.items():
+                mix[name] = pool.at[:, dst].set(pool[:, src])
+            blk["mixer"] = mix
+            blocks[pos] = blk
+        self.cache = tuple(blocks)
+
+    def register_prompt(self, slot: int, prompt) -> int:
+        """Index the slot's now-resident prompt blocks for future hits.
+        Call after the prompt KV is fully written (post prefill / suffix
+        feed). No-op without the prefix cache."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.register(prompt, self._slot_pages[slot])
+
+    def note_host_len(self, slot: int, kv_len: int) -> None:
+        """Host-side length bump during the suffix feed; device mirrors
+        refresh lazily on next access."""
+        self.kv_lens[slot] = kv_len
+        self._tables_dirty = True
+
+    def swap_out(self, slot: int) -> SwapState:
+        """Preempt: image the slot's content-bearing pages + recurrent
+        rows to host memory, then release every device page. The victim
+        afterwards holds zero device pages; its table row points at the
+        null page like any idle slot."""
+        pages = self._slot_pages.get(slot)
+        if pages is None:
+            raise ValueError(f"slot {slot} not occupied")
+        ps = self.ccfg.page_size
+        kv_len = int(self.kv_lens[slot])
+        n_pages = pages_needed(max(kv_len, 1), ps)
+        idx = np.asarray(pages[:n_pages], np.int32)
+        leaf_pages: Dict[Any, np.ndarray] = {}
+        slot_rows: Dict[Any, np.ndarray] = {}
+        for pos, kind in enumerate(self.cfg.layer_pattern):
+            blk = self.cache[pos]
+            if kind == "attn":
+                for name, pool in blk["mixer"].items():
+                    leaf_pages[(pos, name)] = np.asarray(pool[:, idx])
+            else:
+                for part in ("mixer", "ffn"):
+                    for name, v in blk[part].items():
+                        slot_rows[(pos, part, name)] = np.asarray(v[:, slot])
+        if self.prefix is not None:
+            self.prefix.release(pages)
+        else:
+            self.alloc.free(pages)
+        del self._slot_pages[slot]
+        self.page_table[slot] = 0
+        self.kv_lens[slot] = 0
+        self._tables_dirty = True
+        self.swapped_pages += n_pages
+        return SwapState(kv_len, n_pages, leaf_pages, slot_rows)
+
+    def swap_in(self, slot: int, swap: SwapState, prompt,
+                total_len: int) -> int:
+        """Resume a preempted request into ``slot``.
+
+        Full prompt blocks still resident in the prefix index are
+        re-*shared* instead of re-uploaded (the hash chain guarantees
+        content equality); everything else uploads from the host image
+        in one indexed write per leaf. Returns the number of re-shared
+        pages. Feasibility-checked up front; MemoryError leaves no
+        partial state.
+        """
+        ccfg = self.ccfg
+        ps = ccfg.page_size
+        need_total = pages_needed(total_len, ps)
+        if slot in self._slot_pages:
+            raise ValueError(f"slot {slot} already occupied")
+        matched: List[int] = []
+        if self.prefix is not None:
+            from repro.serve.prefix import chunk_hashes
+            full, _ = chunk_hashes(prompt, ps)
+            for h in full:
+                p = self.prefix.lookup(h)
+                if p is None:
+                    break
+                matched.append(p)
+        priv_need = need_total - len(matched)
+        headroom = (self.prefix.headroom(matched)
+                    if self.prefix is not None else self.alloc.n_free)
+        if priv_need > headroom:
+            raise MemoryError(
+                f"page pool exhausted: want {priv_need}, have {headroom}")
+        if matched:
+            self.prefix.acquire(matched)
+        priv = self._alloc_pages(priv_need)
+        pages = matched + priv
+        self._slot_pages[slot] = pages
+        row = np.zeros((ccfg.max_pages_per_seq,), np.int32)
+        row[:need_total] = pages
+        self.page_table[slot] = row
+        self.kv_lens[slot] = swap.kv_len
+        self._tables_dirty = True
+
+        m = len(matched)
+        up_idx = np.asarray(pages[m:swap.n_pages], np.int32)
+        blocks = list(self.cache)
+        for pos, kind in enumerate(self.cfg.layer_pattern):
+            blk = dict(blocks[pos])
+            if kind == "attn":
+                if m < swap.n_pages:
+                    mix = dict(blk["mixer"])
+                    for name, pool in mix.items():
+                        img = swap.leaf_pages[(pos, name)][:, m:swap.n_pages]
+                        mix[name] = pool.at[:, up_idx].set(
+                            jnp.asarray(img, pool.dtype))
+                    blk["mixer"] = mix
+            else:
+                for part in ("mixer", "ffn"):
+                    blk[part] = {
+                        name: v.at[:, slot].set(jnp.asarray(
+                            swap.slot_rows[(pos, part, name)], v.dtype))
+                        for name, v in blk[part].items()}
+            blocks[pos] = blk
+        self.cache = tuple(blocks)
+        if self.prefix is not None:
+            self.prefix.register(prompt, pages)
+        return m
 
     def commit_token(self, slots: Sequence[int]) -> None:
         """Account the token the decode step just wrote for each slot.

@@ -81,6 +81,12 @@ class Scenario:
     faults: FaultSchedule = FaultSchedule()
     # serving workload
     n_requests: int = 40
+    # shared-prefix request mix (DESIGN.md §13). prefix_share=0 keeps the
+    # original unique-payload stream byte-identical (golden traces);
+    # anything >0 switches to prefix_mix_requests-style payloads
+    prefix_share: float = 0.0
+    prefix_len: int = 24
+    suffix_len: int = 8
     expect: Expectations = Expectations()
 
     # -- factories -------------------------------------------------------
@@ -148,6 +154,19 @@ register(Scenario(
     r=3, iters=400, seed=12,
     faults=FaultSchedule(ramps=(
         StragglerRamp(agents=(0, 1, 2, 3, 4), start=120.0, end=300.0,
+                      factor=10.0),))))
+
+register(Scenario(
+    name="flash_crowd_prefix",
+    description="flash_crowd's straggler surge with a 90% shared-prefix "
+                "request mix: the redundancy lives in the request stream "
+                "itself. Dispatch-level replay stays vote-exact (replicas "
+                "are stateless here); the engine-level TTFT win of "
+                "serve.prefix on this mix is measured in "
+                "benchmarks/serve_latency.py --prefix-share.",
+    r=3, iters=200, seed=21, prefix_share=0.9, prefix_len=24, suffix_len=8,
+    faults=FaultSchedule(ramps=(
+        StragglerRamp(agents=(0, 1, 2, 3, 4), start=60.0, end=150.0,
                       factor=10.0),))))
 
 register(Scenario(
@@ -354,9 +373,25 @@ def run_serve(sc: Scenario, check: bool = True) -> ServeReport:
                                transport=transport)
     clock = VirtualClock()
     rate = max(sc.n_requests / max(sc.horizon, 1.0), 1e-6)
+    if sc.prefix_share > 0.0:
+        # shared-prefix mix: one common prompt prefix drawn up front,
+        # then per-arrival coin flips — same rng discipline as
+        # dispatch.prefix_mix_requests but driven by the arrival rng so
+        # the stream stays a pure function of (scenario, seed)
+        shared = np.random.default_rng(sc.seed + 2).integers(
+            0, 256, sc.prefix_len).astype(np.int32)
+
+        def make_payload(i, rng):
+            if rng.random() < sc.prefix_share:
+                suffix = rng.integers(0, 256, sc.suffix_len).astype(np.int32)
+                return np.concatenate([shared, suffix])
+            return rng.integers(0, 256,
+                                sc.prefix_len + sc.suffix_len).astype(np.int32)
+    else:                 # original unique-payload stream, byte-identical
+        make_payload = lambda i, rng: rng.integers(0, 256, 8).astype(np.int32)
     poisson_arrivals(
         clock, rate, sc.n_requests, seed=sc.seed + 1, tag="request",
-        make_payload=lambda i, rng: rng.integers(0, 256, 8).astype(np.int32))
+        make_payload=make_payload)
     for (at, kind, ev) in sc.faults.control_events():
         clock.schedule_at(at, kind, ev)
 

@@ -78,3 +78,189 @@ def test_exhaustion_is_clean():
         alloc.alloc(1)
     alloc.free(got)
     assert alloc.n_free == 4 and alloc.check_invariants()
+
+
+# -- refcount / prefix-cache fuzz (DESIGN.md §13) -----------------------
+
+
+@settings(max_examples=120)
+@given(st.tuples(
+    st.integers(4, 24),
+    st.lists(st.integers(-12, 8), min_size=1, max_size=70)))
+def test_refcount_share_release_free_fuzz(case):
+    """ANY interleaving of alloc/share/release/free keeps the allocator's
+    refcounts exact: a still-shared page can never be freed, releasing an
+    unreferenced page raises, refcount-0 pages stay resident until freed,
+    and the drain leaks nothing."""
+    num_pages, seq = case
+    alloc = PageAllocator(num_pages)
+    model = {}                                    # page -> expected refcount
+    for op in seq:
+        pages = sorted(model)
+        if op > 0:                                # alloc op pages
+            try:
+                got = alloc.alloc(op)
+            except MemoryError:
+                assert op > alloc.n_free
+                continue
+            for p in got:
+                assert p not in model             # never handed out twice
+                model[p] = 1
+        elif op >= -4 and pages:                  # share one held page
+            p = pages[abs(op) % len(pages)]
+            alloc.share([p])
+            model[p] += 1
+        elif op >= -8 and pages:                  # release one holder
+            p = pages[abs(op) % len(pages)]
+            if model[p] == 0:
+                with pytest.raises(ValueError):
+                    alloc.release([p])
+            else:
+                zero = alloc.release([p])
+                model[p] -= 1
+                assert (p in zero) == (model[p] == 0)
+                assert p in alloc._used           # parked, not freed
+        elif pages:                               # free one page
+            p = pages[abs(op) % len(pages)]
+            if model[p] > 1:
+                with pytest.raises(ValueError):   # still shared
+                    alloc.free([p])
+            else:
+                alloc.free([p])
+                del model[p]
+        assert alloc.check_invariants()
+        for p, c in model.items():
+            assert alloc.refcount(p) == c
+        assert alloc.n_used == len(model)
+    for p in sorted(model):                       # drain: no leak
+        while model[p] > 1:
+            alloc.release([p])
+            model[p] -= 1
+        alloc.free([p])
+    assert alloc.n_used == 0 and alloc.n_free == num_pages - 1
+
+
+def _mk_prompt(pool, a, b, c):
+    """Prompts drawn from a tiny token universe with long common stems so
+    plans collide: stem of a*2 tokens + (b % 3) unique tail tokens."""
+    stem = pool[: 2 * (a % 7) + 2]
+    tail = tuple(97 + (b + i * c) % 5 for i in range(b % 3))
+    return stem + tail
+
+
+@settings(max_examples=40)
+@given(st.tuples(
+    st.integers(8, 20),
+    st.lists(st.tuples(st.integers(0, 5), st.integers(0, 9),
+                       st.integers(0, 9), st.integers(1, 7)),
+             min_size=3, max_size=40)))
+def test_prefix_share_cow_evict_swap_fuzz(case):
+    """Structural model of the whole §13 lifecycle against the real
+    PrefixIndex/PageAllocator: random interleavings of admit (share +
+    COW), decode-write, release/evict, reclaim and swap-out/in. Tracked
+    host-side content per physical page proves that (1) an index hit
+    always lands on a page holding exactly the chunk it hashes — no
+    holder ever observes another's mutation, (2) COW forks make the
+    written page exclusive, (3) swap-in's re-shared pages carry content
+    identical to the swapped image, and (4) nothing double-frees or
+    leaks (invariants checked at every step)."""
+    from repro.serve.kv_cache import pages_needed
+    from repro.serve.prefix import PrefixIndex, chunk_hashes
+    import numpy as np
+
+    num_pages, seq = case
+    PS = 4
+    alloc = PageAllocator(num_pages)
+    idx = PrefixIndex(alloc, PS)
+    content = {}                     # phys page -> full-chunk tuple (or None)
+    holders = []                     # {"prompt", "pages"}
+    swapped = []                     # {"prompt", "saved"}
+    pool = tuple(range(1, 20))
+
+    def chunks(prompt):
+        return [tuple(prompt[i * PS:(i + 1) * PS])
+                for i in range(len(prompt) // PS)]
+
+    def admit(prompt):
+        total = len(prompt) + PS     # decode reservation past the prompt
+        plan = idx.plan(np.asarray(prompt, np.int32), total)
+        if plan.need_pages > idx.headroom(plan.shared):
+            return                   # pool full even after reclaim: skip
+        for i, p in enumerate(plan.shared[: len(prompt) // PS]):
+            # an index hit must land on the exact chunk it hashes
+            assert content[p] == chunks(prompt)[i]
+        idx.acquire(plan.shared)
+        shared = list(plan.shared)
+        if plan.need_pages > alloc.n_free:
+            idx.reclaim(plan.need_pages - alloc.n_free)
+        priv = alloc.alloc(plan.need_pages)
+        if plan.cow:
+            copy = priv[0]
+            content[copy] = content.get(shared[-1])      # fork
+            idx.release([shared[-1]])
+            shared[-1] = copy
+            priv = priv[1:]
+        pages = shared + priv
+        for i, ch in enumerate(chunks(prompt)):          # suffix "prefill"
+            content[pages[i]] = ch
+        for p in pages[len(prompt) // PS:]:
+            content[p] = None                            # decode scratch
+        idx.register(np.asarray(prompt, np.int32), pages)
+        holders.append({"prompt": prompt, "pages": pages})
+
+    for (kind, a, b, c) in seq:
+        if kind <= 2:                                    # admit (weighted)
+            admit(_mk_prompt(pool, a, b, c))
+        elif kind == 3 and holders:                      # decode-write
+            h = holders[a % len(holders)]
+            wp = h["pages"][len(h["prompt"]) // PS]      # first write page
+            # the write target is never visible to another holder
+            assert sum(wp in o["pages"] for o in holders) == 1
+            assert alloc.refcount(wp) == 1
+        elif kind == 4 and holders:                      # retire / evict
+            h = holders.pop(a % len(holders))
+            idx.release(h["pages"])
+        elif holders:                                    # swap out + in
+            h = holders.pop(a % len(holders))
+            saved = chunks(h["prompt"])
+            idx.release(h["pages"])
+            swapped.append({"prompt": h["prompt"], "saved": saved})
+            if swapped and b % 2:                        # resume one
+                s = swapped.pop(0)
+                prompt = s["prompt"]
+                full, _ = chunk_hashes(np.asarray(prompt, np.int32), PS)
+                matched = []
+                for hsh in full:
+                    p = idx.lookup(hsh)
+                    if p is None:
+                        break
+                    matched.append(p)
+                need = pages_needed(len(prompt) + PS, PS) - len(matched)
+                if need > idx.headroom(matched):
+                    swapped.append(s)                    # stays swapped
+                else:
+                    for i, p in enumerate(matched):
+                        # hash-chain guarantee: re-shared == swapped image
+                        assert content[p] == s["saved"][i]
+                    idx.acquire(matched)
+                    if need > alloc.n_free:
+                        idx.reclaim(need - alloc.n_free)
+                    priv = alloc.alloc(need)
+                    pages = matched + priv
+                    for i, ch in enumerate(s["saved"]):  # re-upload rest
+                        content[pages[i]] = ch
+                    for p in pages[len(s["saved"]):]:
+                        content[p] = None
+                    idx.register(np.asarray(prompt, np.int32), pages)
+                    holders.append({"prompt": prompt, "pages": pages})
+        if a % 3 == 0:
+            idx.reclaim(b % 3)                           # pressure evictions
+        assert idx.check_invariants()
+        for h in holders:                                # no visible mutation
+            for i, ch in enumerate(chunks(h["prompt"])):
+                assert content[h["pages"][i]] == ch
+    for h in holders:                                    # drain: no leak
+        idx.release(h["pages"])
+    idx.clear()
+    assert idx.check_invariants()
+    assert alloc.n_used == 0 and alloc.n_free == num_pages - 1

@@ -1,0 +1,258 @@
+"""repro.serve.prefix (DESIGN.md §13): cached admissions must be
+token-identical to cold prefill across the GQA and MLA families, COW
+forks must isolate holders, LRU eviction must fire under pool pressure
+without corrupting streams, preempted requests must resume bit-exactly
+from their host swap image, and the SLA policy must order and rescue
+high-priority requests. ``prefix_cache="off"`` keeps the pre-§13
+admission path (covered by the golden traces + existing serve suites).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.model import init_model
+from repro.serve import PagedCacheConfig, ServeEngine
+from repro.serve.prefix import chunk_hashes
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return cfg, init_model(jax.random.PRNGKey(0), cfg, max_pos=64)
+
+
+def _setup(arch, seed=0, max_pos=64):
+    cfg = get_config(arch).reduced()
+    return cfg, init_model(jax.random.PRNGKey(seed), cfg, max_pos=max_pos)
+
+
+def _shared_mix(cfg, seed=3):
+    """Identical, partially-shared and unique prompts: exercises full
+    hits (COW), partial-block hits and cold misses in one workload."""
+    rng = np.random.default_rng(seed)
+    p0 = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    p2 = np.concatenate([p0[:8],
+                         rng.integers(0, cfg.vocab_size, 3).astype(np.int32)])
+    p3 = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    return [p0, p0.copy(), p2, p3], [4, 3, 5, 4]
+
+
+def _run(params, cfg, prompts, budgets, **kw):
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=24,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, **kw)
+    rids = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+    out = eng.run()
+    return eng, [out[r] for r in rids]
+
+
+# -- the §13 contract: cached admissions are token-identical ------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "deepseek-v2-236b"])
+def test_cached_admission_token_parity(arch):
+    cfg, params = _setup(arch)
+    prompts, budgets = _shared_mix(cfg)
+    _, ref = _run(params, cfg, prompts, budgets, superstep_k=1)
+    for k in (1, 4):
+        eng, out = _run(params, cfg, prompts, budgets, superstep_k=k,
+                        prefix_cache="on")
+        for got, want in zip(out, ref):
+            np.testing.assert_array_equal(got, want)
+        # the duplicate full prompt and the shared 8-token stem both hit
+        assert eng.stats["cache_hit_tokens"] > 0
+        assert eng.stats["cow_forks"] >= 1       # full-prompt hit forked
+        assert eng.stats["cache_miss_tokens"] < sum(p.size for p in prompts)
+        eng.kv.prefix.check_invariants()
+        assert eng.kv.alloc.n_used == eng.kv.prefix.n_indexed  # drained
+
+
+def test_cow_isolates_concurrent_identical_prompts(qwen):
+    """Two identical prompts decoding side by side: the second forks the
+    full-hit page before its re-feed write, so both streams match the
+    solo reference exactly (no holder sees the other's mutation)."""
+    cfg, params = qwen
+    rng = np.random.default_rng(9)
+    p = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)  # page-aligned
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=24,
+                            max_pages_per_seq=8)
+    solo = ServeEngine(params, cfg, ccfg)
+    r_solo = solo.submit(p, 6)
+    ref = solo.run()[r_solo]
+
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=1, prefix_cache="on")
+    r1 = eng.submit(p, 6)
+    eng.step()                                   # r1 admitted, decoding
+    r2 = eng.submit(p.copy(), 6)                 # full hit mid-decode
+    out = eng.run()
+    np.testing.assert_array_equal(out[r1], ref)
+    np.testing.assert_array_equal(out[r2], ref)
+    assert eng.stats["cow_forks"] >= 1
+
+
+def test_lru_eviction_under_pool_pressure(qwen):
+    """A pool too small to cache every retired prompt must reclaim
+    refcount-0 pages (oldest first) instead of failing admission — and
+    the streams stay correct while it happens."""
+    cfg, params = qwen
+    rng = np.random.default_rng(4)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=10,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=1, prefix_cache="on")
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(6)]
+    rids = [eng.submit(p, 4) for p in prompts]
+    out = eng.run()
+    assert eng.stats["prefix_evictions"] > 0
+    assert eng.kv.prefix.reclaimable <= ccfg.num_pages - 1
+    eng.kv.prefix.check_invariants()
+    # every stream matches its cold solo reference
+    for p, rid in zip(prompts, rids):
+        solo = ServeEngine(params, cfg, ccfg)
+        r = solo.submit(p, 4)
+        np.testing.assert_array_equal(solo.run()[r], out[rid])
+
+
+def test_prefix_reset_gives_cold_cache(qwen):
+    cfg, params = qwen
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, prefix_cache="on")
+    r1 = eng.submit(p, 4)
+    ref = eng.run()[r1]
+    assert eng.kv.prefix.n_indexed > 0
+    eng.reset_prefix_cache()
+    assert eng.kv.prefix.n_indexed == 0 and eng.kv.alloc.n_used == 0
+    hits = eng.stats["cache_hit_tokens"]
+    r2 = eng.submit(p, 4)
+    out = eng.run()[r2]                          # cold again, same tokens
+    np.testing.assert_array_equal(out, ref)
+    assert eng.stats["cache_hit_tokens"] == hits
+
+
+# -- preemption / swap-to-host ------------------------------------------
+
+
+def test_preempt_swap_resume_exact_streams(qwen):
+    """A high-priority arrival preempts the long low-priority request on
+    the single slot; the victim's KV round-trips through the host swap
+    image and both streams match their solo references token-for-token."""
+    cfg, params = qwen
+    rng = np.random.default_rng(5)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    p_long = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    p_hot = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=1,
+                      prefix_cache="on", policy="sla")
+    r_long = eng.submit(p_long, 12, priority=0)
+    eng.step()
+    eng.step()                                   # mid-decode
+    r_hot = eng.submit(p_hot, 3, priority=2, deadline=2.0)
+    out = eng.run()
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["resumed"] >= 1
+    assert eng.stats["swapped_pages"] >= 1
+    assert eng.sched.finished[r_long].preemptions >= 1
+    for rid, p, n in ((r_long, p_long, 12), (r_hot, p_hot, 3)):
+        solo = ServeEngine(params, cfg, ccfg)
+        r = solo.submit(p, n)
+        np.testing.assert_array_equal(solo.run()[r], out[rid])
+    eng.kv.prefix.check_invariants()
+
+
+def test_swap_roundtrip_without_prefix_index(qwen):
+    """swap_out/swap_in work with prefix_cache off too (pure preemption,
+    full re-upload): the resumed decode continues bit-exactly."""
+    cfg, params = qwen
+    rng = np.random.default_rng(8)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    p = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    solo = ServeEngine(params, cfg, ccfg)
+    r_solo = solo.submit(p, 8)
+    ref = solo.run()[r_solo]
+
+    eng = ServeEngine(params, cfg, ccfg, superstep_k=1)
+    rid = eng.submit(p, 8)
+    eng.step()
+    eng.step()
+    st = eng.sched.active[0]
+    st.swap = eng.kv.swap_out(0)                 # manual preempt
+    eng.sched.preempt(0)
+    assert eng.kv.alloc.n_used == 0              # victim owns no pages
+    out = eng.run()
+    np.testing.assert_array_equal(out[rid], ref)
+
+
+# -- SLA policy at the engine level -------------------------------------
+
+
+def test_sla_admits_high_priority_first(qwen):
+    cfg, params = qwen
+    rng = np.random.default_rng(2)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg, policy="sla")
+    r_lo = eng.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                      2, priority=0)
+    r_hi = eng.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                      2, priority=1)
+    eng.step()
+    # submitted later, served first: after one step the high-priority
+    # request is running (or already finished) and the low one is not
+    started = [st.req.rid for st in eng.sched.active.values()]
+    assert r_hi in started or r_hi in eng.sched.finished
+    assert r_lo not in started and r_lo not in eng.sched.finished
+    eng.run()
+    assert set(eng.sched.finished) == {r_lo, r_hi}
+
+
+def test_engine_records_rejection_and_continues(qwen):
+    """Satellite regression: an over-capacity submit no longer raises
+    mid-stream — it lands in ``rejected`` and the loop keeps serving."""
+    cfg, params = qwen
+    rng = np.random.default_rng(7)
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=16,
+                            max_pages_per_seq=8)
+    eng = ServeEngine(params, cfg, ccfg)
+    bad = eng.submit(rng.integers(0, cfg.vocab_size, 30).astype(np.int32),
+                     20)                          # 50 tokens > table width
+    ok = eng.submit(rng.integers(0, cfg.vocab_size, 5).astype(np.int32), 2)
+    out = eng.run()
+    assert ok in out and bad not in out
+    [(req, reason)] = eng.rejected
+    assert req.rid == bad and "table width" in reason
+
+
+# -- unit: the hash chain -----------------------------------------------
+
+
+def test_chunk_hash_chain_commits_to_prefix():
+    a = np.arange(12, dtype=np.int32)
+    b = a.copy()
+    b[0] = 99                                    # differ only in block 0
+    fa, ta = chunk_hashes(a, 4)
+    fb, tb = chunk_hashes(b, 4)
+    assert len(fa) == 3 and ta is None
+    # every downstream hash changes: a hash commits to the whole prefix
+    assert all(x != y for x, y in zip(fa, fb))
+    # a ragged tail is hashed separately and chains off the last block
+    f2, t2 = chunk_hashes(a[:10], 4)
+    assert f2 == fa[:2] and t2 is not None and t2 != fa[2]
+    # same tokens, different page size -> different chunks
+    f3, _ = chunk_hashes(a, 6)
+    assert f3[0] != fa[0]
+
+
+def test_prefix_requires_attention_only():
+    # jamba has recurrent layers; constructing the engine with the cache
+    # on must be refused (recurrent state is not content-addressable)
+    jcfg = get_config("jamba-v0.1-52b").reduced()
+    jparams = init_model(jax.random.PRNGKey(0), jcfg, max_pos=64)
+    with pytest.raises(ValueError):
+        ServeEngine(jparams, jcfg, PagedCacheConfig(), prefix_cache="on")

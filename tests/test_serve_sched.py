@@ -13,10 +13,20 @@ def _req(rid, s0, new):
 
 
 def test_submit_rejects_wider_than_table():
+    """Over-long requests must not kill the serving loop: submit records
+    them in ``rejected`` (with a reason) and the stream continues."""
     sch = Scheduler(PagedCacheConfig(num_slots=2, page_size=4,
                                      max_pages_per_seq=3))
-    with pytest.raises(ValueError):
-        sch.submit(_req(0, 10, 3))           # 13 tokens -> 4 pages > 3
+    assert not sch.submit(_req(0, 10, 3))    # 13 tokens -> 4 pages > 3
+    assert sch.submit(_req(1, 4, 4))         # later submits still flow
+    assert len(sch.waiting) == 1
+    [(req, reason)] = sch.rejected
+    assert req.rid == 0 and "table width" in reason
+    # a request too big for the page pool is equally hopeless
+    sch2 = Scheduler(PagedCacheConfig(num_slots=2, page_size=4,
+                                      num_pages=3, max_pages_per_seq=8))
+    assert not sch2.submit(_req(0, 10, 3))   # 4 pages > pool of 2
+    assert "pool" in sch2.rejected[0][1]
 
 
 def test_admission_respects_slots_fifo():
@@ -44,7 +54,7 @@ def test_admission_respects_page_budget():
     adm = sch.admissions(free_pages=7)
     # 3 + 3 admitted; request 2 would need 2 more pages than the 1 left
     assert [st.req.rid for st in adm] == [0, 1]
-    assert sch.waiting[0].rid == 2
+    assert sch.waiting[0].req.rid == 2
     # head-of-line: pages freed -> 2 admits next round
     sch.retire(adm[0].slot)
     adm2 = sch.admissions(free_pages=4)
@@ -84,3 +94,78 @@ def test_slot_reuse_across_lengths_drain():
     assert set(sch.finished) == set(range(12))
     for rid, st in sch.finished.items():
         assert len(st.generated) == lens[rid]
+
+
+# -- SLA policy (DESIGN.md §13) -----------------------------------------
+
+
+def test_sla_orders_by_priority_then_slack():
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=64,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg, policy="sla")
+    sch.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=0))
+    sch.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=1, deadline=50.0))
+    sch.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=1, deadline=5.0))
+    adm = sch.admissions(free_pages=63)
+    # both priority-1 requests beat the earlier-arrived priority-0 one,
+    # and the tighter deadline goes first
+    assert [st.req.rid for st in adm] == [2, 1]
+    assert sch.waiting[0].req.rid == 0
+
+
+def test_sla_skips_infeasible_instead_of_blocking():
+    """No head-of-line blocking under sla: a big urgent request that
+    doesn't fit right now is skipped, not a wall."""
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=8,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg, policy="sla")
+    sch.submit(Request(rid=0, prompt=np.zeros(16, np.int32),
+                       max_new_tokens=8, priority=1))     # 6 pages
+    sch.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=0))     # 2 pages
+    adm = sch.admissions(free_pages=3)
+    assert [st.req.rid for st in adm] == [1]
+    assert sch.waiting[0].req.rid == 0
+
+
+def test_preemption_needs_strict_priority_dominance():
+    ccfg = PagedCacheConfig(num_slots=1, page_size=4, num_pages=64,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg, policy="sla")
+    sch.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=8, priority=1))
+    [running] = sch.admissions(free_pages=63)
+    # equal priority never preempts (no swap thrash) ...
+    sch.submit(Request(rid=1, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=1, deadline=1.0))
+    assert sch.preemption_victim() is None
+    # ... strictly higher priority does
+    sch.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                       max_new_tokens=4, priority=2))
+    assert sch.preemption_victim() == running.slot
+    st = sch.preempt(running.slot)
+    assert st.req.rid == 0 and st.preemptions == 1
+    assert sch.waiting[0].req.rid == 0       # back in the queue
+    assert sch.total_preempted == 1
+    # fifo never volunteers a victim
+    sch_f = Scheduler(ccfg)
+    assert sch_f.preemption_victim() is None
+
+
+def test_requeue_undoes_admission():
+    ccfg = PagedCacheConfig(num_slots=2, page_size=4, num_pages=64,
+                            max_pages_per_seq=8)
+    sch = Scheduler(ccfg)
+    sch.submit(_req(0, 4, 4))
+    [st] = sch.admissions(free_pages=63)
+    before = sch.total_admitted
+    sch.requeue(st)
+    assert st.slot == -1 and not sch.active
+    assert sch.waiting[0] is st
+    assert sch.total_admitted == before - 1
+    # the slot is reusable immediately
+    [st2] = sch.admissions(free_pages=63)
+    assert st2 is st
