@@ -128,7 +128,8 @@ def run(sizes=SIZES, n_agents=N_AGENTS, repeats: int = 3,
                     memo[key] = bench_cell(rule, f, n, p, repeats)
                 cell = dict(memo[key])
                 cell.update(model=label, P_nominal=nominal,
-                            capped=p < nominal)
+                            capped=p < nominal,
+                            devices=jax.device_count(), mesh=None)
                 rows.append(cell)
                 print(f"agg/{rule}_n{n}_{label},{cell['fused_us']},"
                       f"host_us={cell['host_us']};x{cell['speedup']}",
@@ -141,6 +142,7 @@ def run(sizes=SIZES, n_agents=N_AGENTS, repeats: int = 3,
         "meta": {
             "backend": jax.default_backend(),
             "jax": jax.__version__,
+            "devices": jax.device_count(),
             "repeats": repeats,
             "max_elems": max_elems,
             "note": "host = AsyncEngine f64 eager reference iteration; "
@@ -159,10 +161,102 @@ def run(sizes=SIZES, n_agents=N_AGENTS, repeats: int = 3,
     return result
 
 
-def main(smoke: bool = False, out: str | None = "BENCH_agg.json"):
+def bench_sharded_cell(rule: str, f: int, n: int, p: int, repeats: int,
+                       mesh, combine: str = "partial") -> dict:
+    """One dp-sharded server iteration (DESIGN.md §14): ShardedGradLedger
+    rows live n/dp per shard, the fused rule runs shard-local and the
+    iterate finishes with one masked psum (combine="partial"); the
+    double-buffered upload scatters into the back buffer."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ledger import (ShardedGradLedger,
+                                   make_sharded_aggregate_apply)
+    from repro.launch.mesh import dp_axis_names
+
+    axes = dp_axis_names(mesh)
+    g_src = _stack(n, p)
+    received = np.ones(n, bool)
+    received[-1] = False
+    idx = np.nonzero(received)[0]
+
+    led = ShardedGradLedger(n, p, mesh=mesh, axes=axes)
+    led.upload(np.arange(n), g_src)
+    step = make_sharded_aggregate_apply(rule, f, GAMMA, mesh, axes, n,
+                                        combine)
+    rx = jnp.asarray(received)
+    state = {"x": jnp.zeros(p, jnp.float32)}
+
+    def fused_iter():
+        state["x"] = step(state["x"], led.front_for_aggregate(), rx, ETA)
+        state["x"].block_until_ready()
+
+    fused_s = _time(fused_iter, repeats)
+
+    def upload_iter():
+        led.upload(idx, g_src[idx])
+        led.data.block_until_ready()
+
+    upload_s = _time(upload_iter, repeats)
+    return dict(rule=rule, f=f, n=n, P=p, combine=combine, sharded=True,
+                fused_us=round(fused_s * 1e6, 1),
+                upload_us=round(upload_s * 1e6, 1),
+                devices=jax.device_count(), mesh=dict(mesh.shape))
+
+
+def run_sharded(total_elems: int | None = None, n: int | None = None,
+                repeats: int = 2, out: str | None = "BENCH_agg.json",
+                combine: str = "partial", smoke: bool = False):
+    """Benchmark the dp-sharded ledger and *append* the rows to the
+    committed BENCH_agg.json: the (n, P) stack lives sharded over every
+    device, so a row can exceed the single-device ``max_elems`` cap the
+    replicated sweep is capped at (n*P > 640M with 8 devices).
+    trimmed_mean is omitted — it has no shard-local partial form and
+    would rebuild the full stack per shard (see dist/registry.py)."""
+    import jax
+
+    d = jax.device_count()
+    mesh = jax.make_mesh((d,), ("data",))
+    n = n or d
+    if total_elems is None:
+        total_elems = 2_000_000 if smoke else 768_000_000
+    p = total_elems // n
+    rules = (("mean", 0),) if smoke else \
+        (("sum", 0), ("mean", 0), ("cge", 1), ("quantized", 0))
+    rows = []
+    for rule, f in rules:
+        cell = bench_sharded_cell(rule, f, n, p, repeats, mesh, combine)
+        rows.append(cell)
+        print(f"agg/{rule}_n{n}_sharded{d}dev,{cell['fused_us']},"
+              f"nP={n * p};combine={combine}", flush=True)
+    if out:
+        try:
+            with open(out) as fh:
+                data = json.load(fh)
+        except FileNotFoundError:
+            data = {"meta": {}, "rows": []}
+        data["rows"] = [r for r in data["rows"]
+                        if not r.get("sharded")] + rows
+        data["meta"]["sharded_note"] = (
+            "sharded rows: ShardedGradLedger over a "
+            f"{dict(mesh.shape)} mesh, combine={combine} (shard-local "
+            "fused rule + one masked psum); n*P exceeds the replicated "
+            "sweep's max_elems cap. No host_us column — the host "
+            "reference cannot hold the unsharded stack.")
+        with open(out, "w") as fh:
+            json.dump(data, fh, indent=1)
+        print(f"agg/written,{out},sharded_rows={len(rows)}", flush=True)
+    return rows
+
+
+def main(smoke: bool = False, out: str | None = "BENCH_agg.json",
+         record: bool = False, sharded: bool = False):
+    if sharded:
+        return run_sharded(out=None if smoke else out, smoke=smoke)
     if smoke:
         return run(sizes=(("smoke-64k", 65_536), ("smoke-1m", 1_048_576)),
-                   n_agents=(8,), repeats=2, out=None)
+                   n_agents=(8,), repeats=2,
+                   out="BENCH_agg.smoke.json" if record else None)
     return run(out=out)
 
 
@@ -170,6 +264,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, no JSON (CI stage 6)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="dp-sharded ledger rows, appended to --out "
+                         "(run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--out", default="BENCH_agg.json")
     args = ap.parse_args()
-    main(smoke=args.smoke, out=args.out)
+    main(smoke=args.smoke, out=args.out, sharded=args.sharded)

@@ -23,8 +23,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     ap.add_argument("--record", action="store_true",
-                    help="serve: run the superstep K x arch sweep and "
-                         "commit BENCH_serve.json")
+                    help="write BENCH_serve.json (superstep K x arch "
+                         "sweep) and BENCH_agg.json, each row stamped "
+                         "with device count and mesh shape")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -64,8 +65,13 @@ def main() -> None:
        else (lambda: serve_latency.main(do_record=args.record)))
 
     from benchmarks import agg_throughput
-    go("agg", (lambda: agg_throughput.main(smoke=True)) if args.fast
-       else agg_throughput.main)
+    # --record stamps every row with device count + mesh shape (None for
+    # the replicated path); a smoke --record writes BENCH_agg.smoke.json
+    # so a reduced sweep never clobbers the committed full baseline
+    go("agg", (lambda: agg_throughput.main(smoke=True,
+                                           record=args.record))
+       if args.fast
+       else (lambda: agg_throughput.main(record=args.record)))
 
 
 if __name__ == "__main__":

@@ -92,7 +92,7 @@ def _requests(cfg, n_requests: int, seed: int):
 
 def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b",
                superstep_k: int = 8, warmup: bool = True,
-               repeats: int = 1):
+               repeats: int = 1, tp: int = 1):
     """Timed drain of a mixed-length workload at one superstep length.
 
     The identical workload is submitted and drained once first on the
@@ -109,9 +109,16 @@ def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b",
 
     cfg = get_config(arch).reduced()
     params = init_model(jax.random.PRNGKey(seed), cfg, max_pos=128)
+    mesh = None
+    if tp > 1:                        # TP-meshed engine (DESIGN.md §14)
+        if jax.device_count() % tp:
+            raise ValueError(f"tp={tp} does not divide "
+                             f"{jax.device_count()} devices")
+        mesh = jax.make_mesh((jax.device_count() // tp, tp),
+                             ("data", "model"))
     engine = ServeEngine(params, cfg, PagedCacheConfig(
         num_slots=2, page_size=8, num_pages=16, max_pages_per_seq=6),
-        superstep_k=superstep_k)
+        superstep_k=superstep_k, mesh=mesh)
     reqs = _requests(cfg, n_requests, seed)
     total = sum(n for _, n in reqs)
     if warmup:                       # compile prefill buckets + every K
@@ -127,6 +134,8 @@ def run_engine(n_requests: int = 8, seed: int = 0, arch: str = "qwen2-0.5b",
         wall = min(wall, time.time() - t0)
     syncs = engine.stats["host_syncs"] - base["host_syncs"]
     return dict(arch=arch, superstep_k=superstep_k, tokens=total,
+                devices=jax.device_count(), tp=tp,
+                mesh=dict(mesh.shape) if mesh is not None else None,
                 wall_s=wall, tok_s=total / max(wall, 1e-9),
                 host_syncs=syncs, syncs_per_token=syncs / total,
                 supersteps=engine.stats["supersteps"] - base["supersteps"],
@@ -258,6 +267,7 @@ def record(rows_dispatch, rows_engine, rows_prefix, engine_requests: int,
     payload = {
         "meta": {
             "backend": jax.default_backend(),
+            "devices": jax.device_count(),
             "archs": list(RECORD_ARCHS),
             "superstep_ks": list(RECORD_KS),
             "engine_requests": engine_requests,
@@ -281,7 +291,20 @@ def record(rows_dispatch, rows_engine, rows_prefix, engine_requests: int,
 
 def main(n_requests: int = 2000, engine_requests: int = 8,
          superstep_k: int = 8, do_record: bool = False,
-         smoke: bool = False, prefix_share: float | None = None):
+         smoke: bool = False, prefix_share: float | None = None,
+         tp: int = 1):
+    if tp > 1 and not do_record:
+        # sharded engine smoke (CI stage 9): the TP-meshed engine must be
+        # token-identical to the replicated one on the same workload
+        ref = run_engine(engine_requests, superstep_k=superstep_k)
+        row = run_engine(engine_requests, superstep_k=superstep_k, tp=tp)
+        match = row["generated"] == ref["generated"]
+        print(f"serve/engine_tp{tp}_{row['arch']}_k{row['superstep_k']},"
+              f"{row['wall_s'] * 1e6:.0f},"
+              f"tok_s={row['tok_s']:.1f};mesh={row['mesh']};"
+              f"match={int(match)}")
+        assert match, "tp engine streams diverged from replicated"
+        return
     if prefix_share is not None and not do_record:
         # the §13 comparison alone (CI stage 8 runs this under --smoke)
         row = run_prefix(prefix_share,
@@ -332,11 +355,15 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-share", type=float, default=None,
                     help="run only the §13 prefix-cache comparison at "
                          "this share mix (e.g. 0.9)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="run only the TP-meshed engine parity smoke at "
+                         "this tensor-parallel degree (needs "
+                         "device_count %% tp == 0)")
     args = ap.parse_args()
     if args.smoke:
         main(n_requests=200, engine_requests=3,
              superstep_k=args.superstep_k, do_record=args.record,
-             smoke=True, prefix_share=args.prefix_share)
+             smoke=True, prefix_share=args.prefix_share, tp=args.tp)
     else:
         main(superstep_k=args.superstep_k, do_record=args.record,
-             prefix_share=args.prefix_share)
+             prefix_share=args.prefix_share, tp=args.tp)

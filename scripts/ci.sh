@@ -26,6 +26,12 @@
 #          token parity, refcount/COW/swap property fuzz, the SLA
 #          scheduler suite, then the flash-crowd prefix benchmark smoke
 #          at a 90% share mix (asserts cached streams == baseline).
+# Stage 9: sharded engine conformance (DESIGN.md §14) — on 8 virtual
+#          devices, the dp-sharded double-buffered ledger vs the
+#          single-buffer device path (bit-identical, all rules) and the
+#          TP-meshed decode superstep vs the replicated engine
+#          (token-identical, GQA + MLA), then the sharded benchmark
+#          smokes (dp-sharded agg iteration + tp=2 serving parity).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -65,5 +71,14 @@ JAX_PLATFORMS=cpu python -m pytest -q tests/test_serve_prefix.py \
     tests/test_property_kvcache.py tests/test_serve_sched.py
 JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/serve_latency.py \
     --smoke --prefix-share 0.9
+
+echo "== stage 9: sharded ledger + TP-meshed serving parity =="
+# the suites spawn their own 8-virtual-device subprocesses; run them via
+# pytest so they land in the same report as stage 2
+python -m pytest -q tests/test_sharded_parity.py
+XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+    PYTHONPATH=src python benchmarks/agg_throughput.py --sharded --smoke
+XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+    PYTHONPATH=src python benchmarks/serve_latency.py --smoke --tp 2
 
 echo "CI OK"

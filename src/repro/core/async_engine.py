@@ -160,8 +160,13 @@ class EngineConfig:
     wire_dtype: str = "float32"       # on-the-wire element format
     # "host" = the f64 numpy reference pipeline (the conformance/golden
     # bit stream); "device" = resident f32 GradLedger + one fused jitted
-    # rule->step->project dispatch per iteration (DESIGN.md §11)
+    # rule->step->project dispatch per iteration (DESIGN.md §11);
+    # "sharded" = the ledger dp-sharded over a mesh (pass ``mesh=`` to
+    # AsyncEngine) with double-buffered uploads (DESIGN.md §14)
     agg_backend: str = "host"
+    # sharded backend: "gather" (bit-exact conformance combine) or
+    # "partial" (shard-local kernels + one masked psum, production form)
+    ledger_combine: str = "gather"
     seed: int = 0
     # crash windows: (agent, t_start, t_end) in wall-clock time
     crashes: Tuple[Tuple[int, float, float], ...] = ()
@@ -189,7 +194,7 @@ class AsyncEngine:
     def __init__(self, grad_fn, x0: np.ndarray, cfg: EngineConfig,
                  latency: Optional[LatencyModel] = None,
                  loss_fn=None, x_star: Optional[np.ndarray] = None,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None, mesh=None):
         self.grad_fn = grad_fn
         self.x = np.asarray(x0, np.float64).copy()
         self.cfg = cfg
@@ -221,10 +226,10 @@ class AsyncEngine:
         # device buffer + fused aggregate step (opt-in fast path). The
         # host branch keeps an empty matrix in device mode so shape-based
         # code never sees None.
-        if cfg.agg_backend not in ("host", "device"):
+        if cfg.agg_backend not in ("host", "device", "sharded"):
             raise ValueError(
                 f"unknown agg_backend {cfg.agg_backend!r}; "
-                "expected 'host' or 'device'")
+                "expected 'host', 'device' or 'sharded'")
         self._dev = None
         if cfg.agg_backend == "device":
             import jax.numpy as jnp
@@ -234,6 +239,21 @@ class AsyncEngine:
             self._dev_x = jnp.asarray(self.x, jnp.float32)
             self._agg_apply = make_aggregate_apply(cfg.rule, cfg.f,
                                                    cfg.proj_gamma)
+        elif cfg.agg_backend == "sharded":
+            if mesh is None:
+                raise ValueError("agg_backend='sharded' needs a mesh")
+            import jax.numpy as jnp
+            from repro.core.ledger import (ShardedGradLedger,
+                                           make_sharded_aggregate_apply)
+            from repro.launch.mesh import dp_axis_names
+            self._jnp = jnp
+            axes = dp_axis_names(mesh)
+            self._dev = ShardedGradLedger(cfg.n_agents, x0.size,
+                                          mesh=mesh, axes=axes)
+            self._dev_x = jnp.asarray(self.x, jnp.float32)
+            self._agg_apply = make_sharded_aggregate_apply(
+                cfg.rule, cfg.f, cfg.proj_gamma, mesh, axes,
+                cfg.n_agents, cfg.ledger_combine)
         self._ledger_g = np.zeros(
             (cfg.n_agents, 0 if self._dev is not None else x0.size))
 
@@ -256,7 +276,8 @@ class AsyncEngine:
         jitted dispatch over the resident ledger; ``self.x`` stays a host
         f64 mirror (exact f32 values) for grad_fn / loss / accounting."""
         jnp = self._jnp
-        self._dev_x = self._agg_apply(self._dev_x, self._dev.data,
+        self._dev_x = self._agg_apply(self._dev_x,
+                                      self._dev.front_for_aggregate(),
                                       jnp.asarray(received), float(eta))
         self.x = np.asarray(self._dev_x).astype(np.float64)
 

@@ -98,6 +98,25 @@ class FlatLayout:
 _LAYOUTS: Dict[Tuple, FlatLayout] = {}
 
 
+def ledger_dim(dim_or_layout_or_tree) -> int:
+    """Per-agent flat width P of a ledger, from an int, a
+    :class:`FlatLayout`, or a gradient pytree."""
+    if isinstance(dim_or_layout_or_tree, FlatLayout):
+        return dim_or_layout_or_tree.total
+    if isinstance(dim_or_layout_or_tree, (int, np.integer)):
+        return int(dim_or_layout_or_tree)
+    return layout_of(dim_or_layout_or_tree).total
+
+
+def ledger_zeros(n_agents: int, dim_or_layout_or_tree) -> jnp.ndarray:
+    """The canonical flat ``(n, P)`` f32 ledger buffer. Every ledger in
+    the repo — :class:`GradLedger`, :class:`ShardedGradLedger`, and the
+    SPMD stale path's per-step buffer in ``launch/train.py`` — is built
+    through this one helper, so the layout contract exists once."""
+    return jnp.zeros((int(n_agents), ledger_dim(dim_or_layout_or_tree)),
+                     jnp.float32)
+
+
 def layout_of(tree: PyTree, stacked: bool = False) -> FlatLayout:
     """The cached :class:`FlatLayout` of ``tree``. With ``stacked=True``
     the leaves carry a leading agent axis that the layout strips (the
@@ -131,13 +150,11 @@ class GradLedger:
     def __init__(self, n_agents: int, dim_or_layout):
         if isinstance(dim_or_layout, FlatLayout):
             self.layout: Optional[FlatLayout] = dim_or_layout
-            dim = dim_or_layout.total
         else:
             self.layout = None
-            dim = int(dim_or_layout)
         self.n_agents = int(n_agents)
-        self.dim = dim
-        self.data = jnp.zeros((self.n_agents, self.dim), jnp.float32)
+        self.dim = ledger_dim(dim_or_layout)
+        self.data = ledger_zeros(self.n_agents, self.dim)
 
     def upload(self, idx, rows) -> None:
         """Scatter ``rows (k, P)`` into agent rows ``idx (k,)``."""
@@ -158,6 +175,12 @@ class GradLedger:
             raise ValueError("ledger was built without a FlatLayout")
         self.upload_row(j, self.layout.flatten(tree))
 
+    def front_for_aggregate(self) -> jnp.ndarray:
+        """The buffer the fused aggregate should consume this iteration.
+        Single-buffer ledger: the live buffer itself (the double-buffered
+        :class:`ShardedGradLedger` overrides this with the swap)."""
+        return self.data
+
     # -- checkpointing ---------------------------------------------------
     def host(self) -> np.ndarray:
         """Host f32 copy (snapshot form; restoring it is bit-exact)."""
@@ -165,6 +188,96 @@ class GradLedger:
 
     def load(self, arr) -> None:
         self.data = jnp.asarray(np.asarray(arr, np.float32))
+
+
+class ShardedGradLedger(GradLedger):
+    """Double-buffered ``(n, P)`` ledger sharded over the dp axes: each
+    shard holds its ``n/dp`` agent rows (``PartitionSpec((dp...), None)``,
+    row-major agent order — the same linearization as
+    ``collectives.agent_index``).
+
+    Double-buffer swap protocol (DESIGN.md §14). Invariant: the buffer
+    uploads currently target (``bufs[cur]``) contains *every* upload ever
+    made, so ``host()`` is exact at any instant, including mid-swap.
+
+    - ``upload``              scatters into ``bufs[cur]`` and logs the
+                              (idx, rows) pair in ``pending``.
+    - ``front_for_aggregate`` returns ``bufs[cur]`` as the aggregation
+                              front, replays ``pending`` into the *other*
+                              buffer (catching it up off the upload
+                              critical path), and makes that other buffer
+                              the new upload target.
+
+    After a swap, in-flight uploads scatter into the back buffer while
+    the fused aggregate+apply reads the front — on accelerator backends
+    the two dispatch streams overlap, so uploads never serialize behind
+    aggregation. Donation rules: the scatter donates its destination
+    buffer (in-place row writes, both buffers); the fused aggregate jit
+    donates ONLY the iterate ``x`` — never the ledger, which the back
+    buffer may still be replaying from.
+    """
+
+    def __init__(self, n_agents: int, dim_or_layout, *, mesh, axes):
+        # bufs must exist before super().__init__ assigns self.data
+        # (the assignment routes through the property setter below)
+        self._bufs: list = [None, None]
+        self._cur = 0
+        super().__init__(n_agents, dim_or_layout)
+        from jax.sharding import NamedSharding, PartitionSpec
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        if self.n_agents % n_shards:
+            raise ValueError(
+                f"n_agents={self.n_agents} not divisible by the "
+                f"{n_shards}-way dp sharding over axes {axes}")
+        self.mesh = mesh
+        self.axes = axes
+        self.spec = PartitionSpec(axes if len(axes) > 1 else axes[0], None)
+        zero = jax.device_put(self._bufs[self._cur],
+                              NamedSharding(mesh, self.spec))
+        self._bufs = [zero, zero]
+        self._pending: list = []
+        self.swaps = 0
+
+    # ``data`` stays the public name of the authoritative buffer
+    @property
+    def data(self) -> jnp.ndarray:
+        return self._bufs[self._cur]
+
+    @data.setter
+    def data(self, value) -> None:
+        self._bufs[self._cur] = value
+
+    def upload(self, idx, rows) -> None:
+        idx = np.asarray(idx, np.int32).reshape(-1)
+        if idx.size == 0:
+            return
+        rows = jnp.asarray(rows, jnp.float32).reshape(idx.size, self.dim)
+        idx = jnp.asarray(idx)
+        self._bufs[self._cur] = _scatter_rows(self._bufs[self._cur],
+                                              idx, rows)
+        self._pending.append((idx, rows))
+
+    def front_for_aggregate(self) -> jnp.ndarray:
+        front = self._bufs[self._cur]
+        back = 1 - self._cur
+        for idx, rows in self._pending:
+            self._bufs[back] = _scatter_rows(self._bufs[back], idx, rows)
+        self._pending.clear()
+        self._cur = back
+        self.swaps += 1
+        return front
+
+    def load(self, arr) -> None:
+        """Restore both buffers (a snapshot is a settled ledger — no
+        pending uploads survive a restore)."""
+        from jax.sharding import NamedSharding
+        full = jax.device_put(jnp.asarray(np.asarray(arr, np.float32)),
+                              NamedSharding(self.mesh, self.spec))
+        self._bufs = [full, full]
+        self._pending.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -194,5 +307,41 @@ def make_aggregate_apply(rule: str, f: int, gamma: float) -> Callable:
     def step(x, g, received, eta):
         agg = dev(g, received).astype(jnp.float32)
         return gradagg.project_ball(x - jnp.float32(eta) * agg, gamma)
+
+    return jax.jit(step, donate_argnums=_DONATE)
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_aggregate_apply(rule: str, f: int, gamma: float,
+                                 mesh, axes: Tuple[str, ...], n_agents: int,
+                                 combine: str = "gather") -> Callable:
+    """Sharded twin of :func:`make_aggregate_apply` over a dp-sharded
+    ledger (DESIGN.md §14). Same signature and same fused structure —
+    rule -> step-size scale -> ``project_ball`` in ONE jit — but the rule
+    runs inside a shard_map body on each shard's ``(n_loc, P)`` row block
+    via the registry's ``bind_sharded`` twin; the iterate and mask stay
+    replicated and the post-psum update is computed identically on every
+    shard. Donates only the iterate: the ledger buffer belongs to the
+    double-buffer protocol and is never consumed in place.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.core import gradagg
+    from repro.dist.compat import shard_map
+    from repro.dist.registry import get_rule
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    agg_loc = get_rule(rule).bind_sharded(f, axes=axes, n=n_agents,
+                                          combine=combine)
+    row_spec = P(axes if len(axes) > 1 else axes[0], None)
+
+    def body(x, g_loc, received, eta):
+        agg = agg_loc(g_loc, received).astype(jnp.float32)
+        return gradagg.project_ball(x - eta * agg, gamma)
+
+    smap = shard_map(body, mesh=mesh,
+                     in_specs=(P(), row_spec, P(), P()),
+                     out_specs=P(), axis_names=set(axes))
+
+    def step(x, g_loc, received, eta):
+        return smap(x, g_loc, received, jnp.float32(eta))
 
     return jax.jit(step, donate_argnums=_DONATE)

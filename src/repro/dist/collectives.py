@@ -126,6 +126,44 @@ def trimmed_mean_all(tree: PyTree, received, f: int, axes) -> PyTree:
                             stacked, rx)
 
 
+# ---------------------------------------------------------------------------
+# sharded-ledger helpers (DESIGN.md §14)
+#
+# The dp-sharded GradLedger stores each shard's n/dp agent rows as a
+# local ``(n_loc, P)`` block; ``ledger_all_rows`` rebuilds the full
+# row-major ``(n, ...)`` array inside a shard_map body. The rebuild is a
+# zero-pad + ONE psum: every summand is either the original row bits or
+# exact 0.0, and ``x + 0.0`` is exact in IEEE-754, so the reconstruction
+# is *bit-identical* to the unsharded array — which is what lets the
+# ``combine="gather"`` conformance mode of the sharded ledger reproduce
+# the PR 4 single-buffer device path bit for bit. (Shard-local partial
+# reductions + psum are NOT bit-identical — f32 addition is
+# non-associative — which is why they are the tolerance-checked
+# ``combine="partial"`` production mode instead.)
+
+
+def shard_row_slice(axes, n: int) -> Tuple[Any, int]:
+    """(first row index, row count) of this shard's ledger block."""
+    n_shards = axis_count(axes)
+    if n % n_shards:
+        raise ValueError(f"n_agents={n} not divisible by {n_shards} shards")
+    n_loc = n // n_shards
+    return agent_index(axes) * n_loc, n_loc
+
+
+def ledger_all_rows(x_loc, axes, n: int):
+    """Rebuild the full row-major ``(n, ...)`` array from this shard's
+    ``(n_loc, ...)`` row block (bit-exact; one psum, no all-gather —
+    see compat notes on the 0.4.37 all_gather partitioner)."""
+    row0, n_loc = shard_row_slice(axes, n)
+    if x_loc.shape[0] != n_loc:
+        raise ValueError(
+            f"local row block has {x_loc.shape[0]} rows, want {n_loc}")
+    full = jnp.zeros((n,) + x_loc.shape[1:], x_loc.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(full, x_loc, row0, axis=0)
+    return psum_all(full, axes)
+
+
 def quantized_psum(tree: PyTree, w, err: PyTree, axes
                    ) -> Tuple[PyTree, PyTree]:
     """SPMD twin of ``agg_quantized`` with error feedback: add the carried

@@ -69,6 +69,40 @@ class AggregationRule:
             return partial(fn, f=f)
         return fn
 
+    def bind_sharded(self, f: int = 0, *, axes, n: int,
+                     combine: str = "gather") -> Callable:
+        """Shard_map-body twin over a dp-sharded ledger (DESIGN.md §14):
+        ``(g_loc (n_loc, P) f32, received (n,) bool) -> (P,) f32`` where
+        ``g_loc`` is this shard's row block and ``received`` is the full
+        replicated mask. Two combine modes:
+
+        - ``"gather"``   rebuild the full ledger bit-exactly
+                         (``ledger_all_rows``) and run the unsharded
+                         device twin — the conformance mode, bit-identical
+                         to the single-buffer PR 4 path by construction.
+        - ``"partial"``  run the fused GradAgg kernel on the local row
+                         block and finish with ONE masked psum — the
+                         production mode (P-sized memory per shard stays
+                         n_loc x P); reduction order differs from the
+                         monolithic dot, so parity is tolerance-checked.
+                         trimmed_mean has no partial form (coordinate-wise
+                         order statistics need every row) and falls back
+                         to gather, same as its collective twin.
+        """
+        if combine not in ("gather", "partial"):
+            raise ValueError(f"unknown combine mode {combine!r}")
+        sharded = _PARTIAL_FORMS.get(self.name) if combine == "partial" \
+            else None
+        if sharded is not None:
+            return partial(sharded, f=f, axes=axes, n=n) if self.needs_f \
+                else partial(sharded, axes=axes, n=n)
+        dev = self.bind_device(f)
+
+        def gather_run(g_loc, received):
+            return dev(C.ledger_all_rows(g_loc, axes, n), received)
+
+        return gather_run
+
 
 # ---------------------------------------------------------------------------
 # uniform SPMD wrappers (parity-suite semantics == reference semantics)
@@ -130,6 +164,61 @@ def _dev_quantized(g, received):
     from repro.kernels import ops as K
     q, scale = gradagg.quantize_int8_parts(g.astype(jnp.float32))
     return K.dequant_accum(q, scale[:, 0], received)
+
+
+# ---------------------------------------------------------------------------
+# shard-local partial forms (combine="partial"; DESIGN.md §14)
+#
+# Each runs inside a shard_map body on this shard's (n_loc, P) row block
+# with the full replicated (n,) received mask, applies the same fused
+# kernel the replicated device path uses — but on n_loc rows — and
+# finishes with ONE psum. Row-local math (per-row norms, per-row int8
+# quantization) is exact on shards because row sharding keeps P intact
+# per row; only the final cross-shard sum reorders reductions.
+
+
+def _recv_local(received, axes, n):
+    row0, n_loc = C.shard_row_slice(axes, n)
+    return jax.lax.dynamic_slice_in_dim(received, row0, n_loc)
+
+
+def _part_sum(g_loc, received, *, axes, n):
+    from repro.kernels.agg import masked_sum_dot
+    return C.psum_all(masked_sum_dot(g_loc, _recv_local(received, axes, n)),
+                      axes)
+
+
+def _part_mean(g_loc, received, *, axes, n):
+    s = _part_sum(g_loc, received, axes=axes, n=n)
+    return s / jnp.maximum(jnp.sum(received.astype(jnp.float32)), 1.0)
+
+
+def _part_cge(g_loc, received, *, f, axes, n):
+    from repro.kernels.agg import row_norms
+    # (n,) norm vector all-reduced bit-exactly -> every shard derives the
+    # identical keep-set (the keep-set math exists once, same as cge_psum)
+    norms = C.ledger_all_rows(row_norms(g_loc), axes, n)
+    keep = gradagg.cge_mask_from_norms(norms, received, f)
+    keep_loc = _recv_local(keep, axes, n)
+    return C.psum_all(keep_loc.astype(jnp.float32) @ g_loc.astype(jnp.float32),
+                      axes)
+
+
+def _part_quantized(g_loc, received, *, axes, n):
+    from repro.kernels import ops as K
+    q, scale = gradagg.quantize_int8_parts(g_loc.astype(jnp.float32))
+    return C.psum_all(
+        K.dequant_accum(q, scale[:, 0], _recv_local(received, axes, n)),
+        axes)
+
+
+_PARTIAL_FORMS: Dict[str, Callable] = {
+    "sum": _part_sum,
+    "mean": _part_mean,
+    "cge": _part_cge,
+    "quantized": _part_quantized,
+    # trimmed_mean: intentionally absent -> gather fallback
+}
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -99,6 +100,44 @@ class MeshRules:
         if not axes:
             return None
         return axes[0] if len(axes) == 1 else axes
+
+
+# ---------------------------------------------------------------------------
+# serving TP context (DESIGN.md §14)
+#
+# The model files never see a mesh. Like ``act_sharding.act_policy``, the
+# serving engine installs an ambient (mesh, tp_axes) context around its
+# jitted closures' *tracing*; the paged decode branches in
+# ``models/attention.py`` consult it and route the attention math through
+# the per-shard kernel wrapper in ``kernels/decode_attention.py``. With
+# no context active — the replicated conformance engine — the model code
+# is byte-identical to PR 5/6 behavior.
+
+_SERVE_TP = threading.local()
+
+
+class serve_tp:
+    """Context manager installing the serving tensor-parallel mesh."""
+
+    def __init__(self, mesh, tp_axes: Tuple[str, ...] = ("model",)):
+        self._val = (mesh, tuple(tp_axes))
+
+    def __enter__(self):
+        stack = getattr(_SERVE_TP, "stack", None)
+        if stack is None:
+            stack = _SERVE_TP.stack = []
+        stack.append(self._val)
+        return self._val
+
+    def __exit__(self, *exc):
+        _SERVE_TP.stack.pop()
+        return False
+
+
+def current_serve_tp() -> Optional[Tuple[Any, Tuple[str, ...]]]:
+    """(mesh, tp_axes) of the active serving TP context, or None."""
+    stack = getattr(_SERVE_TP, "stack", None)
+    return stack[-1] if stack else None
 
 
 # ---------------------------------------------------------------------------
@@ -210,16 +249,36 @@ def batch_specs(rules: MeshRules, batch: PyTree) -> PyTree:
 
 
 def cache_specs(rules: MeshRules, cache: PyTree) -> PyTree:
-    """Decode/prefill KV & SSM caches, layout ``(n_periods, batch, ...)``:
-    batch over dp, the trailing (head_dim / state) dim over tp so long
-    caches fit per device; the scan-stacked leading dim stays replicated."""
-    def spec(leaf):
+    """Decode/prefill KV & SSM caches.
+
+    Dense caches, layout ``(n_periods, batch, ...)``: batch over dp, the
+    trailing (head_dim / state) dim over tp so long caches fit per
+    device; the scan-stacked leading dim stays replicated.
+
+    Paged pools (leaf names ``*_pages``, DESIGN.md §14): the page pool is
+    a *global* resource indexed by the shared page table — never batch-
+    sharded. GQA ``k_pages``/``v_pages`` ``(n_periods, N, PS, n_kv, hd)``
+    shard the kv-head dim over tp (attention has no cross-kv-head
+    reduction, so the tp split is exact and the grouped decode kernel's
+    ``(B, Hkv, Pmax)`` grid splits per shard); MLA latent pools
+    (``ckv_pages``/``kr_pages``) replicate — they are rank-compressed
+    (that is MLA's point) and carry no head axis; the compute shards
+    over query heads instead."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in leaves:
+        names = _path_names(path)
+        name = names[-1] if names else ""
         shape = tuple(leaf.shape)
         dims = [None] * len(shape)
+        if name.endswith("_pages"):
+            if name in ("k_pages", "v_pages") and len(shape) >= 2:
+                dims[-2] = rules.fit(rules.tp_axes, shape[-2])
+            specs.append(P(*dims))
+            continue
         if len(shape) >= 2:
             dims[1] = rules.fit(rules.dp_axes, shape[1])
         if len(shape) >= 3:
             dims[-1] = rules.fit(rules.tp_axes, shape[-1])
-        return P(*dims)
-
-    return jax.tree.map(spec, cache)
+        specs.append(P(*dims))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -204,15 +204,22 @@ def masked_sum_dot(g, received):
     return received.astype(jnp.float32) @ g.astype(jnp.float32)
 
 
+def row_norms(g):
+    """Per-agent (row) L2 norms of a flat ledger block, f32 accumulation.
+    Row-local, so it is exact on a dp-sharded ledger's ``(n_loc, P)``
+    block — the sharded CGE path computes these locally and all-reduces
+    only the (n,) norm vector (DESIGN.md §14)."""
+    gf = g.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(gf * gf, axis=1))
+
+
 def masked_cge_dot(g, received, f: int):
     """Portable production form of the CGE reduction: per-agent norms,
     the shared ``cge_mask_from_norms`` keep-set, then the masked matvec
     — the non-TPU twin of :func:`masked_cge_reduce`."""
     from repro.core.gradagg import cge_mask_from_norms  # shared keep-set
-    gf = g.astype(jnp.float32)
-    norms = jnp.sqrt(jnp.sum(gf * gf, axis=1))
-    keep = cge_mask_from_norms(norms, received, f)
-    return keep.astype(jnp.float32) @ gf
+    keep = cge_mask_from_norms(row_norms(g), received, f)
+    return keep.astype(jnp.float32) @ g.astype(jnp.float32)
 
 
 def trimmed_mean_running(g, received, f: int):

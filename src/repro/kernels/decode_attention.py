@@ -47,6 +47,55 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
+def tp_paged_decode(q, k_pages, v_pages, page_table, kv_lens, *,
+                    mesh, tp_axes=("model",), impl: str = "auto"):
+    """Tensor-parallel grouped paged decode (DESIGN.md §14).
+
+    q: (B, H, D); k_pages/v_pages: (N, PS, Hkv, D|Dv) sharded over the
+    kv-head dim per ``dist.sharding.cache_specs``; page_table/kv_lens
+    replicated. Invokes the grouped decode kernel per shard through
+    shard_map — each shard runs the full ``(B, Hkv/tp, Pmax)`` grid on
+    its contiguous KV-head block, which carries its G query heads with
+    it (H/tp = G * Hkv/tp, so the head grouping is preserved exactly).
+    GQA has no cross-KV-head reduction, so the head-split is *bit-exact*;
+    the output is then pinned back to replicated — an exact concat — so
+    the downstream ``wo`` projection runs identically to the replicated
+    engine and token streams match it bit for bit.
+
+    Falls back to the unsharded dispatcher when the tp extent is 1 or
+    does not divide both H and Hkv (same trim-to-fit philosophy as
+    ``MeshRules.fit``).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.kernels import ops as K     # lazy: ops imports this module
+
+    b, h, d = q.shape
+    hkv = k_pages.shape[2]
+    tp_axes = tuple(tp_axes)
+    ts = 1
+    for a in tp_axes:
+        ts *= mesh.shape[a]
+    if ts == 1 or h % ts or hkv % ts:
+        return K.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                        kv_lens, impl=impl)
+    from repro.dist.compat import shard_map
+    tp = tp_axes[0] if len(tp_axes) == 1 else tp_axes
+
+    def body(q_, kp_, vp_, tbl_, l_):
+        return K.paged_decode_attention(q_, kp_, vp_, tbl_, l_, impl=impl)
+
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(P(None, tp, None), P(None, None, tp, None),
+                            P(None, None, tp, None), P(None, None),
+                            P(None)),
+                  out_specs=P(None, tp, None), axis_names=set(tp_axes))
+    out = f(q, k_pages, v_pages, page_table, kv_lens)
+    # exact gather boundary: concatenating the per-shard head blocks is
+    # bit-exact, and the replicated wo matmul that follows then matches
+    # the unsharded engine's reduction order
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
 def _pages_used(ln, ps: int):
     """Pages holding a length-``ln`` sequence, floored at 1 so the clamp
     ``min(p, used-1)`` always names a fetchable (masked) page."""

@@ -60,7 +60,7 @@ def make_decode_step(cfg: ArchConfig, moe_groups: int = 1,
 
 def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
                     steps: int, page_size: int = 8,
-                    superstep_k: int = 8):
+                    superstep_k: int = 8, mesh=None, rules=None):
     """CPU-scale generation driver on the paged serving engine.
 
     Returns ``prompt`` extended with exactly ``steps`` new tokens per row.
@@ -69,7 +69,10 @@ def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
     equal-length prompts admit as one group, so the whole batch costs one
     prefill plus ``steps - 1`` decode iterations, grouped into
     ``ceil((steps - 1) / superstep_k)`` device-resident supersteps
-    (``superstep_k=1`` forces the per-token host loop).
+    (``superstep_k=1`` forces the per-token host loop). A ``mesh`` (plus
+    optional ``MeshRules``) runs the engine tensor-parallel — KV pools
+    sharded over the kv-head dim, the decode kernel per-shard — with a
+    token stream identical to the replicated engine (DESIGN.md §14).
     """
     import numpy as np
     from repro.serve import PagedCacheConfig, ServeEngine
@@ -82,7 +85,8 @@ def greedy_generate(params, cfg: ArchConfig, prompt, max_len: int,
     ccfg = PagedCacheConfig(num_slots=b, page_size=page_size,
                             num_pages=b * per_seq + 1,
                             max_pages_per_seq=per_seq)
-    engine = ServeEngine(params, cfg, ccfg, superstep_k=superstep_k)
+    engine = ServeEngine(params, cfg, ccfg, superstep_k=superstep_k,
+                         mesh=mesh, rules=rules)
     rids = [engine.submit(np.asarray(prompt[i]), steps) for i in range(b)]
     out = engine.run()
     new = jnp.asarray(np.stack([out[rid] for rid in rids]))

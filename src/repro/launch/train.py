@@ -15,8 +15,10 @@ Two paths:
    - ``stale``      rule (15) with a per-agent gradient ledger,
    - ``trimmed``    coordinate-wise trimmed mean,
    - ``quantized``  int8 error-feedback compressed aggregation.
-   Params/optimizer are TP-sharded + DP-replicated on this path (the
-   per-agent ledger precludes ZeRO-3 over DP; see DESIGN.md §5).
+   Params/optimizer are TP-sharded + DP-replicated on this path. The
+   (n, P) ledger itself shards over DP — each shard owns its agent's
+   row, and ``core.ledger.ShardedGradLedger`` carries the same row
+   layout server-side (DESIGN.md §5, §14).
 """
 from __future__ import annotations
 
@@ -30,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.ledger import layout_of, ledger_zeros
 from repro.dist import collectives as C
 from repro.dist.compat import shard_map
 from repro.dist.registry import resolve_mode
@@ -96,12 +99,12 @@ def init_state(rng, cfg: ArchConfig, tc: TrainConfig, max_pos: int = 32768,
     if tc.mode == "stale":
         # one flat (n_agents, P) f32 buffer per run instead of a per-leaf
         # pytree of ledgers: the rule-(15) substitution and the masked
-        # psum run over a single resident array, and the leaf offsets are
-        # the cached repro.core.ledger layout (DESIGN.md §11)
-        from repro.core.ledger import layout_of
+        # psum run over a single resident array, with the leaf offsets
+        # from the cached repro.core.ledger layout — built through the
+        # same ledger_zeros helper as GradLedger/ShardedGradLedger, so
+        # the (n, P) layout contract exists once (DESIGN.md §11, §14)
         state["ledger"] = {
-            "g": jnp.zeros((n_agents, layout_of(params).total),
-                           jnp.float32),
+            "g": ledger_zeros(n_agents, params),
             "ts": jnp.full((n_agents,), -1, jnp.int32),
         }
     if tc.mode == "quantized":
@@ -237,8 +240,7 @@ def make_general_step(cfg: ArchConfig, tc: TrainConfig, mesh,
                      else _psum_all(mask_self, dp))
             loss = _psum_all(loss * mask_self, dp)
         elif tc.mode == "stale":
-            from repro.core.ledger import layout_of
-            layout = layout_of(grads)
+            layout = layout_of(grads)   # cached shared layout (module top)
             ledger_self = state["ledger"]["g"][0]          # (P,) flat
             ts_self = state["ledger"]["ts"][0]
             fresh = mask_self > 0

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist.act_sharding import constrain
+from repro.dist.sharding import current_serve_tp
 from repro.models.layers import apply_rope, dense_init, _dtype
 
 PLAIN_MAX_SEQ = 2048          # above this, use chunked online-softmax
@@ -209,8 +210,18 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions=None, kv_x=None,
                                lens, ps)
             vp = _paged_append(cache["v_pages"], v_new[:, 0], page_table,
                                lens, ps)
-            out = paged_decode_attention(q[:, 0], kp, vp, page_table,
-                                         lens + 1)[:, None]  # (B,1,H,hd)
+            tp_ctx = current_serve_tp()
+            if tp_ctx is not None:
+                # serving TP (DESIGN.md §14): kv-head-sharded pools, the
+                # grouped kernel grid split per shard, output gathered
+                # back to replicated (exact) before the wo projection
+                from repro.kernels.decode_attention import tp_paged_decode
+                out = tp_paged_decode(q[:, 0], kp, vp, page_table,
+                                      lens + 1, mesh=tp_ctx[0],
+                                      tp_axes=tp_ctx[1])[:, None]
+            else:
+                out = paged_decode_attention(q[:, 0], kp, vp, page_table,
+                                             lens + 1)[:, None]  # (B,1,H,hd)
             y = jnp.einsum("bse,ed->bsd",
                            out.astype(x.dtype).reshape(b, s, -1), p["wo"])
             return y, {"k_pages": kp, "v_pages": vp}
@@ -291,6 +302,35 @@ def _rms(x, scale):
     return (y * scale.astype(jnp.float32)).astype(x.dtype)
 
 
+def _mla_tp_shard(absorbed, q_nope, q_rope, w_uk, w_uv, ckv, kr, kv_len,
+                  h: int):
+    """Run the absorbed-decode attention, split over query heads when a
+    serving TP context is active (identity dispatch otherwise). Inputs
+    with a head axis (q_nope/q_rope dim 2, w_uk/w_uv dim 1) split over
+    tp; the latent streams stay replicated. The per-shard output head
+    block is pinned back to replicated — an exact concat — before the
+    shared wo projection (DESIGN.md §14)."""
+    tp_ctx = current_serve_tp()
+    if tp_ctx is None:
+        return absorbed(q_nope, q_rope, w_uk, w_uv, ckv, kr, kv_len)
+    mesh, tp_axes = tp_ctx
+    ts = 1
+    for a in tp_axes:
+        ts *= mesh.shape[a]
+    if ts == 1 or h % ts:
+        return absorbed(q_nope, q_rope, w_uk, w_uv, ckv, kr, kv_len)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.compat import shard_map
+    tp = tp_axes[0] if len(tp_axes) == 1 else tp_axes
+    f = shard_map(absorbed, mesh=mesh,
+                  in_specs=(P(None, None, tp, None), P(None, None, tp, None),
+                            P(None, tp, None), P(None, tp, None),
+                            P(), P(), P()),
+                  out_specs=P(None, None, tp, None), axis_names=set(tp_axes))
+    out = f(q_nope, q_rope, w_uk, w_uv, ckv, kr, kv_len)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
 def apply_mla(p, x, cfg: ArchConfig, *, positions, cache=None,
               cache_index=None, return_cache=False, page_table=None):
     m = cfg.mla
@@ -340,15 +380,27 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, cache=None,
             kv_len = jnp.broadcast_to(idx + 1, (b,))
             new_cache = {"ckv": ckv, "kr": kr}
         t = ckv.shape[1]
-        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"])
-        s_ = (jnp.einsum("bshl,btl->bhst", q_abs, ckv)
-              + jnp.einsum("bshr,btr->bhst", q_rope, kr)
-              ).astype(jnp.float32) * ((nope + rp) ** -0.5)
-        mask = jnp.arange(t)[None, :] < kv_len[:, None]
-        s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
-        w = jax.nn.softmax(s_, axis=-1).astype(x.dtype)
-        out_lat = jnp.einsum("bhst,btl->bshl", w, ckv)
-        out = jnp.einsum("bshl,lhv->bshv", out_lat, p["w_uv"])
+        scale = (nope + rp) ** -0.5
+        cdt = x.dtype
+
+        def _absorbed(qn, qr, wuk, wuv, ckv_, kr_, kl):
+            q_abs = jnp.einsum("bshn,lhn->bshl", qn, wuk)
+            s_ = (jnp.einsum("bshl,btl->bhst", q_abs, ckv_)
+                  + jnp.einsum("bshr,btr->bhst", qr, kr_)
+                  ).astype(jnp.float32) * scale
+            mask = jnp.arange(t)[None, :] < kl[:, None]
+            s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+            w = jax.nn.softmax(s_, axis=-1).astype(cdt)
+            out_lat = jnp.einsum("bhst,btl->bshl", w, ckv_)
+            return jnp.einsum("bshl,lhv->bshv", out_lat, wuv)
+
+        # serving TP (DESIGN.md §14): MLA's latent pools are rank-
+        # compressed and headless (replicated); the absorbed-decode
+        # *compute* splits over query heads instead — per-head math has
+        # no cross-head reduction until wo, so the split and the gather
+        # back to replicated are both exact
+        out = _mla_tp_shard(_absorbed, q_nope, q_rope, p["w_uk"],
+                            p["w_uv"], ckv, kr, kv_len, h)
     else:
         # train / prefill: materialize per-head K,V (flash-compatible)
         t = s

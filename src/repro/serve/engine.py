@@ -31,6 +31,7 @@ batch — continuous batching must be batch-composition-invariant.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -38,8 +39,10 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ArchConfig
+from repro.dist.sharding import MeshRules, cache_specs, serve_tp
 from repro.models.model import apply_model
 from repro.serve.kv_cache import (PagedCacheConfig, PagedKVCache,
                                   pages_needed)
@@ -50,7 +53,8 @@ class ServeEngine:
     def __init__(self, params, cfg: ArchConfig,
                  ccfg: Optional[PagedCacheConfig] = None,
                  superstep_k: int = 8, prefix_cache: str = "off",
-                 policy: str = "fifo"):
+                 policy: str = "fifo", mesh=None,
+                 rules: Optional[MeshRules] = None):
         if superstep_k < 1:
             raise ValueError(f"need superstep_k >= 1, got {superstep_k}")
         if prefix_cache not in ("off", "on"):
@@ -63,6 +67,19 @@ class ServeEngine:
             # reconstruct it
             raise ValueError(
                 "prefix_cache requires an attention-only layer pattern")
+        # serving TP (DESIGN.md §14): with a mesh, params stay *replicated*
+        # — the exactness boundary is the paged attention kernel alone, so
+        # every matmul outside it keeps the single-device reduction order
+        # and the token stream matches the replicated engine bit for bit.
+        self.mesh = mesh
+        if mesh is not None and rules is None:
+            rules = MeshRules(
+                fsdp_axes=(),
+                axis_sizes={a: mesh.shape[a] for a in mesh.axis_names})
+        self.rules = rules if mesh is not None else None
+        if mesh is not None:
+            params = jax.device_put(
+                params, NamedSharding(mesh, PartitionSpec()))
         self.params = params
         self.cfg = cfg
         self.superstep_k = int(superstep_k)
@@ -76,7 +93,8 @@ class ServeEngine:
         self.infer_cfg = cfg
         self.ccfg = ccfg or PagedCacheConfig()
         self.kv = PagedKVCache(cfg, self.ccfg,
-                               enable_prefix=(prefix_cache == "on"))
+                               enable_prefix=(prefix_cache == "on"),
+                               mesh=mesh, rules=self.rules)
         self.sched = Scheduler(self.ccfg, policy=policy)
         # host_syncs counts device->host materializations (one per prefill
         # group + one per superstep boundary): the drained-workload figure
@@ -90,6 +108,32 @@ class ServeEngine:
                       "prefix_evictions": 0}
         self._next_rid = 0
 
+        # _tp() installs the ambient (mesh, tp_axes) context *around the
+        # closure bodies below* — tracing happens inside it, so the paged
+        # decode branches in models/attention.py route through the
+        # per-shard kernel wrappers. _pin() constrains the carried cache
+        # back to its cache_specs placement so the pools stay kv-head-
+        # sharded across scan iterations instead of being gathered.
+        if mesh is not None:
+            tp_ax = self.rules.tp_axes
+            specs = cache_specs(self.rules, self.kv.cache)
+            _, treedef = jax.tree_util.tree_flatten(self.kv.cache)
+            cache_sh = jax.tree_util.tree_unflatten(
+                treedef, [NamedSharding(mesh, s)
+                          for s in treedef.flatten_up_to(specs)])
+
+            def _tp():
+                return serve_tp(mesh, tp_ax)
+
+            def _pin(cch):
+                return jax.lax.with_sharding_constraint(cch, cache_sh)
+        else:
+            def _tp():
+                return contextlib.nullcontext()
+
+            def _pin(cch):
+                return cch
+
         def _prefill(params, tokens):
             logits, _, cache = apply_model(params, tokens, cfg,
                                            mode="prefill",
@@ -97,11 +141,12 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         def _decode(params, tokens, cache, lens, tbl):
-            logits, _, new_cache = apply_model(
-                params, tokens, cfg, mode="decode", cache=cache,
-                cache_index=lens, page_table=tbl, remat_policy="none")
+            with _tp():
+                logits, _, new_cache = apply_model(
+                    params, tokens, cfg, mode="decode", cache=cache,
+                    cache_index=lens, page_table=tbl, remat_policy="none")
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt, new_cache
+            return nxt, _pin(new_cache)
 
         def _superstep(params, pending, cache, lens, tbl, remaining, *,
                        k: int):
@@ -118,12 +163,14 @@ class ServeEngine:
             def body(carry, _):
                 pend, cch, ln, rem = carry
                 active = (rem > 0).astype(jnp.int32)
-                logits, _, cch = apply_model(
-                    params, pend[:, None], cfg, mode="decode", cache=cch,
-                    cache_index=ln, page_table=tbl, remat_policy="none")
+                with _tp():
+                    logits, _, cch = apply_model(
+                        params, pend[:, None], cfg, mode="decode",
+                        cache=cch, cache_index=ln, page_table=tbl,
+                        remat_policy="none")
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                 nxt = jnp.where(active == 1, nxt, pend)
-                return (nxt, cch, ln + active, rem - active), nxt
+                return (nxt, _pin(cch), ln + active, rem - active), nxt
 
             (pending, cache, lens, _), toks = jax.lax.scan(
                 body, (pending, cache, lens, remaining), None, length=k)

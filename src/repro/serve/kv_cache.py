@@ -187,7 +187,7 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ArchConfig, ccfg: PagedCacheConfig,
-                 enable_prefix: bool = False):
+                 enable_prefix: bool = False, mesh=None, rules=None):
         if cfg.encoder_decoder:
             raise NotImplementedError(
                 "paged serving supports decoder-only archs")
@@ -225,6 +225,27 @@ class PagedKVCache:
             else:
                 blocks.append(dense[pos])
         self.cache = tuple(blocks)
+
+        # serving mesh (DESIGN.md §14): place pool leaves per cache_specs
+        # — KV pools sharded over the kv-head dim, MLA latent pools and
+        # everything else replicated. mesh=None (the default) leaves the
+        # cache byte-identical to the single-device layout.
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.dist.sharding import MeshRules, cache_specs
+            if rules is None:
+                rules = MeshRules(
+                    fsdp_axes=(),
+                    axis_sizes={a: mesh.shape[a] for a in mesh.axis_names})
+            self.rules = rules
+            specs = cache_specs(rules, self.cache)
+            leaves, treedef = jax.tree_util.tree_flatten(self.cache)
+            spec_leaves = treedef.flatten_up_to(specs)
+            self.cache = jax.tree_util.tree_unflatten(treedef, [
+                jax.device_put(x, NamedSharding(mesh, s))
+                for x, s in zip(leaves, spec_leaves)])
 
     # -- device views ----------------------------------------------------
     # NB: explicit copies. On the CPU backend ``jnp.asarray(np_array)`` is

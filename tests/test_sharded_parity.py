@@ -1,0 +1,42 @@
+"""Sharded-engine conformance (DESIGN.md §14), run in subprocesses with
+8 virtual devices (the device count must be set before jax initializes,
+so these cannot run in the main pytest process):
+
+- the dp-sharded double-buffered GradLedger must be bit-identical to the
+  single-buffer device path for every rule (combine="gather"), including
+  a snapshot -> restore mid-swap;
+- the TP-meshed decode superstep must be token-identical to the
+  replicated serving engine (GQA + MLA).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_suite(suite: str) -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "helpers",
+                                      "parity_checks.py"),
+         "--suite", suite],
+        capture_output=True, text=True, env=env, timeout=520)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, f"{suite} parity checks failed"
+    assert "ALL OK" in proc.stdout
+
+
+@pytest.mark.multidev
+@pytest.mark.timeout(540)
+def test_sharded_ledger_matches_single_buffer_device_path():
+    _run_suite("sharded-ledger")
+
+
+@pytest.mark.multidev
+@pytest.mark.timeout(540)
+def test_tp_meshed_superstep_token_identical():
+    _run_suite("serve-tp")
