@@ -235,9 +235,13 @@ class ShardedGradLedger(GradLedger):
         self.mesh = mesh
         self.axes = axes
         self.spec = PartitionSpec(axes if len(axes) > 1 else axes[0], None)
-        zero = jax.device_put(self._bufs[self._cur],
-                              NamedSharding(mesh, self.spec))
-        self._bufs = [zero, zero]
+        sharding = NamedSharding(mesh, self.spec)
+        zero = jax.device_put(self._bufs[self._cur], sharding)
+        # the two slots must be *independent* device buffers: _scatter_rows
+        # donates its destination on accelerator backends, so aliased slots
+        # would have the first upload invalidate the other buffer and the
+        # next pending replay would read a deleted array
+        self._bufs = [zero, jax.device_put(jnp.zeros_like(zero), sharding)]
         self._pending: list = []
         self.swaps = 0
 
@@ -274,9 +278,12 @@ class ShardedGradLedger(GradLedger):
         """Restore both buffers (a snapshot is a settled ledger — no
         pending uploads survive a restore)."""
         from jax.sharding import NamedSharding
-        full = jax.device_put(jnp.asarray(np.asarray(arr, np.float32)),
-                              NamedSharding(self.mesh, self.spec))
-        self._bufs = [full, full]
+        sharding = NamedSharding(self.mesh, self.spec)
+        host = jnp.asarray(np.asarray(arr, np.float32))
+        # two independent copies — never alias the slots (donation, above);
+        # jnp.copy forces a fresh buffer even where device_put would no-op
+        self._bufs = [jax.device_put(host, sharding),
+                      jax.device_put(jnp.copy(host), sharding)]
         self._pending.clear()
 
 

@@ -248,7 +248,8 @@ def batch_specs(rules: MeshRules, batch: PyTree) -> PyTree:
     return jax.tree.map(spec, batch)
 
 
-def cache_specs(rules: MeshRules, cache: PyTree) -> PyTree:
+def cache_specs(rules: MeshRules, cache: PyTree,
+                n_query_heads: Optional[int] = None) -> PyTree:
     """Decode/prefill KV & SSM caches.
 
     Dense caches, layout ``(n_periods, batch, ...)``: batch over dp, the
@@ -263,7 +264,15 @@ def cache_specs(rules: MeshRules, cache: PyTree) -> PyTree:
     ``(B, Hkv, Pmax)`` grid splits per shard); MLA latent pools
     (``ckv_pages``/``kr_pages``) replicate — they are rank-compressed
     (that is MLA's point) and carry no head axis; the compute shards
-    over query heads instead."""
+    over query heads instead.
+
+    The kv-head split must mirror ``tp_paged_decode``'s dispatch exactly:
+    the kernel takes its sharded path only when the *full* tp extent
+    divides both Hkv and the query-head count H, else it falls back to
+    the unsharded dispatcher — and tp-sharded pools under a fallback
+    kernel would silently all-gather every decode step. Pass
+    ``n_query_heads`` (the model's H) so the predicate can match; when
+    unknown (None) only the Hkv condition applies."""
     leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = []
     for path, leaf in leaves:
@@ -273,7 +282,13 @@ def cache_specs(rules: MeshRules, cache: PyTree) -> PyTree:
         dims = [None] * len(shape)
         if name.endswith("_pages"):
             if name in ("k_pages", "v_pages") and len(shape) >= 2:
-                dims[-2] = rules.fit(rules.tp_axes, shape[-2])
+                ts = rules.size(rules.tp_axes)
+                if (rules.tp_axes and shape[-2] % ts == 0
+                        and (n_query_heads is None
+                             or n_query_heads % ts == 0)):
+                    dims[-2] = (rules.tp_axes[0]
+                                if len(rules.tp_axes) == 1
+                                else rules.tp_axes)
             specs.append(P(*dims))
             continue
         if len(shape) >= 2:

@@ -221,7 +221,8 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         batch = input_specs(cfg, shape, n_ag, "decode")
         p_specs = tree_specs(params, compute_rules)
         b_specs = {"tokens": batch_specs(rules, batch["tokens"]),
-                   "cache": cache_specs(rules, batch["cache"]),
+                   "cache": cache_specs(rules, batch["cache"],
+                                        n_query_heads=cfg.n_heads),
                    "pos": P()}
         step = V.make_decode_step(cfg, moe_groups=n_ag, dp=dp, tp=tp, sizes=sizes)
         jf = jax.jit(step, in_shardings=(_mk_shardings(mesh, p_specs),

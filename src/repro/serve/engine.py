@@ -71,12 +71,16 @@ class ServeEngine:
         # — the exactness boundary is the paged attention kernel alone, so
         # every matmul outside it keeps the single-device reduction order
         # and the token stream matches the replicated engine bit for bit.
+        if rules is not None and mesh is None:
+            raise ValueError(
+                "rules= provided without mesh= — pass the mesh the rules "
+                "describe, or drop rules for the replicated engine")
         self.mesh = mesh
         if mesh is not None and rules is None:
             rules = MeshRules(
                 fsdp_axes=(),
                 axis_sizes={a: mesh.shape[a] for a in mesh.axis_names})
-        self.rules = rules if mesh is not None else None
+        self.rules = rules
         if mesh is not None:
             params = jax.device_put(
                 params, NamedSharding(mesh, PartitionSpec()))
@@ -116,7 +120,8 @@ class ServeEngine:
         # sharded across scan iterations instead of being gathered.
         if mesh is not None:
             tp_ax = self.rules.tp_axes
-            specs = cache_specs(self.rules, self.kv.cache)
+            specs = cache_specs(self.rules, self.kv.cache,
+                                n_query_heads=self.cfg.n_heads)
             _, treedef = jax.tree_util.tree_flatten(self.kv.cache)
             cache_sh = jax.tree_util.tree_unflatten(
                 treedef, [NamedSharding(mesh, s)

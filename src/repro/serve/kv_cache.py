@@ -230,6 +230,10 @@ class PagedKVCache:
         # — KV pools sharded over the kv-head dim, MLA latent pools and
         # everything else replicated. mesh=None (the default) leaves the
         # cache byte-identical to the single-device layout.
+        if rules is not None and mesh is None:
+            raise ValueError(
+                "rules= provided without mesh= — pass the mesh the rules "
+                "describe, or drop rules for the replicated cache")
         self.mesh = mesh
         self.rules = None
         if mesh is not None:
@@ -240,7 +244,8 @@ class PagedKVCache:
                     fsdp_axes=(),
                     axis_sizes={a: mesh.shape[a] for a in mesh.axis_names})
             self.rules = rules
-            specs = cache_specs(rules, self.cache)
+            specs = cache_specs(rules, self.cache,
+                                n_query_heads=cfg.n_heads)
             leaves, treedef = jax.tree_util.tree_flatten(self.cache)
             spec_leaves = treedef.flatten_up_to(specs)
             self.cache = jax.tree_util.tree_unflatten(treedef, [

@@ -130,14 +130,27 @@ def main_sharded_ledger():
         check(f"ledger[{tag}] engine sharded==device bit-identical",
               np.array_equal(xs_eng["device"], xs_eng["sharded"]))
 
+        # donation safety: the two double-buffer slots must be backed by
+        # independent device buffers after both __init__ and load() —
+        # _scatter_rows donates its destination on accelerator backends,
+        # so aliased slots would have the first upload invalidate the
+        # other buffer (use-after-donation on the next pending replay)
+        def no_alias(ledger):
+            pts = [{s.data.unsafe_buffer_pointer()
+                    for s in buf.addressable_shards}
+                   for buf in ledger._bufs]
+            return not (pts[0] & pts[1])
+
         # snapshot -> restore with an upload pending in the back buffer
         led = ShardedGradLedger(n, d, mesh=mesh, axes=axes)
+        check(f"ledger[{tag}] init buffers unaliased", no_alias(led))
         led.upload([0, 3], rng.normal(size=(2, d)).astype(np.float32))
         _ = led.front_for_aggregate()                       # swap once
         led.upload([5], rng.normal(size=(1, d)).astype(np.float32))
         snap = led.host()
         led2 = ShardedGradLedger(n, d, mesh=mesh, axes=axes)
         led2.load(snap)
+        check(f"ledger[{tag}] load buffers unaliased", no_alias(led2))
         check(f"ledger[{tag}] restore mid-swap exact",
               np.array_equal(led2.host(), snap))
         _ = led2.front_for_aggregate()

@@ -57,6 +57,16 @@ def test_engine_ragged_matches_rollout(arch):
     assert eng.kv.alloc.n_used == 0
 
 
+def test_engine_rejects_rules_without_mesh():
+    """rules= without mesh= used to be silently discarded, masking a
+    misconfiguration — it must raise."""
+    from repro.dist.sharding import MeshRules
+    cfg = get_config("qwen2-0.5b").reduced()
+    with pytest.raises(ValueError, match="rules= provided without mesh="):
+        ServeEngine({}, cfg, rules=MeshRules(
+            fsdp_axes=(), axis_sizes={"model": 2}))
+
+
 def test_engine_midstream_admission_slot_reuse():
     """A request submitted while the engine is mid-decode is picked up at
     the next step and lands in a retired request's slot."""

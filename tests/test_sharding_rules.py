@@ -68,6 +68,26 @@ def test_cache_specs_tp_on_trailing():
     assert k == P(None, "data", None, None, "model")
 
 
+def test_cache_specs_pages_match_kernel_dispatch():
+    """k_pages/v_pages shard the kv-head dim only when the *full* tp
+    extent divides both Hkv and the query-head count — the predicate
+    must mirror tp_paged_decode's fallback, else the pools stay sharded
+    while the kernel runs unsharded and every decode step all-gathers
+    the pools."""
+    sds = jax.ShapeDtypeStruct((2, 16, 8, 4, 64), jax.numpy.bfloat16)
+    cache = ({"mixer": {"k_pages": sds, "v_pages": sds}, "ffn": {}},)
+    rules = MeshRules(fsdp_axes=(), axis_sizes={"model": 4})
+    kp = cache_specs(rules, cache, n_query_heads=8)[0]["mixer"]["k_pages"]
+    assert kp == P(None, None, None, "model", None)   # 4 | Hkv=4, 4 | H=8
+    kp = cache_specs(rules, cache, n_query_heads=6)[0]["mixer"]["k_pages"]
+    assert kp == P(None, None, None, None, None)      # 4 | Hkv but 4 ∤ H
+    # multi-axis tp: never trim to a subgroup the kernel would not use
+    rules = MeshRules(fsdp_axes=(), tp_axes=("model", "pod"),
+                      axis_sizes={"model": 2, "pod": 2})
+    kp = cache_specs(rules, cache, n_query_heads=6)[0]["mixer"]["k_pages"]
+    assert kp == P(None, None, None, None, None)
+
+
 def test_kv_projections_replicated_over_tp():
     """repeat-KV layout: wk/wv out dims never sharded over model."""
     cfg = get_config("yi-6b")
