@@ -1,0 +1,171 @@
+"""Trace-driven e2e load benchmark: every named scenario replayed against
+real replicated ServeEngines (DESIGN.md §15).
+
+One shared :class:`repro.sim.e2e.EngineFleet` (jit paid once) replays
+every registered scenario through ``repro.sim.e2e.run_e2e``: open-loop
+Poisson arrivals, per-superstep virtual-time billing through the
+scenario's ``SimTransport``, crashes/stragglers/drops/Byzantine replicas
+acting on real decode supersteps. Per scenario it reports the native-r
+row (churn applied) plus the post-hoc goodput / p99-TTFT curve over
+r in {0..3}, with the §10 conformance checks (vote soundness,
+replica agreement, request liveness, quorum_honest) run on every
+request.
+
+For scale, the stand-in dispatch curve (``serve_latency.run_dispatch``)
+is re-run at the same fleet size so BENCH_e2e.json carries both the
+simulated-replica and the real-engine r-curves side by side.
+
+    PYTHONPATH=src python benchmarks/e2e_load.py [--smoke] [--record] \
+        [--scenario NAME ...]
+
+``--record`` writes BENCH_e2e.json; under ``--smoke`` it writes
+BENCH_e2e.smoke.json instead so a reduced sweep never clobbers the
+committed full baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_e2e.json"
+
+# scenarios whose *design* includes losing the honest majority or a
+# total outage; native-row violations there are the scenario's point,
+# everywhere else they fail the gate
+EXPECT_VIOLATIONS: tuple = ()
+SMOKE_REQUESTS = 4
+
+
+def run_scenarios(names=None, n_requests=None, fleet=None, log=print):
+    from repro.sim.e2e import EngineFleet, run_e2e
+    from repro.sim.scenario import SCENARIOS, get_scenario
+
+    names = list(names) if names else sorted(SCENARIOS)
+    scs = [get_scenario(n) for n in names]
+    sizes = {sc.n_agents for sc in scs}
+    if len(sizes) != 1:
+        raise ValueError(f"scenarios disagree on fleet size: {sizes}")
+    if fleet is None:
+        fleet = EngineFleet(sizes.pop())
+    rows = []
+    for sc in scs:
+        t0 = time.time()
+        rep = run_e2e(sc, fleet=fleet, n_requests=n_requests)
+        wall = time.time() - t0
+        if n_requests is not None and n_requests < sc.n_requests:
+            log(f"# e2e/{sc.name}: truncated to {n_requests}/"
+                f"{sc.n_requests} requests (smoke)")
+        rows.append(dict(
+            scenario=sc.name, wall_s=wall,
+            n_requests=len(rep.requests), r_native=sc.r,
+            retries=sum(q.retries for q in rep.requests),
+            copies_lost=sum(1 for q in rep.requests
+                            for c in q.copies.values()
+                            if c.status == "lost"),
+            copies_dropped=sum(1 for q in rep.requests
+                               for c in q.copies.values()
+                               if c.status == "dropped"),
+            native=rep.native.as_dict(),
+            sweep={str(r): row.as_dict() for r, row in rep.sweep.items()},
+            violations=rep.violations))
+    return rows, fleet
+
+
+def check_rows(rows) -> list:
+    """The acceptance gates of DESIGN.md §15, machine-checked at record
+    time so a drifted BENCH_e2e.json can never be committed quietly:
+    conformance must be clean outside the scenarios that expect
+    violations, and p99 TTFT must improve with r wherever a straggler
+    ramp (or permanent stragglers) gives redundancy something to hide."""
+    from repro.sim.scenario import get_scenario
+    problems = []
+    for row in rows:
+        name = row["scenario"]
+        if name not in EXPECT_VIOLATIONS and row["violations"]:
+            problems.append(f"{name}: {len(row['violations'])} conformance "
+                            f"violations: {row['violations'][:3]}")
+        sc = get_scenario(name)
+        if sc.faults.ramps or sc.stragglers:
+            curve = [row["sweep"][str(r)]["p99_ttft"]
+                     for r in (0, 1, 2, 3)]
+            if not all(a >= b for a, b in zip(curve, curve[1:])):
+                problems.append(f"{name}: p99 TTFT not improving with r: "
+                                f"{curve}")
+    return problems
+
+
+def record(rows, dispatch_rows, smoke: bool) -> pathlib.Path:
+    import jax
+    from repro.sim.e2e import E2EConfig
+    ecfg = E2EConfig()
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "devices": jax.device_count(),
+            "arch": ecfg.arch, "max_new_tokens": ecfg.max_new_tokens,
+            "superstep_k": ecfg.superstep_k,
+            "smoke": smoke,   # a reduced sweep must be visibly reduced
+            "note": "reduced() registry archs; every row is a full "
+                    "scenario replay against real replicated engines "
+                    "with per-superstep virtual-time fault injection "
+                    "(DESIGN.md §15); sweep rows are the post-hoc "
+                    "first-(n-r) selection over one recorded run; "
+                    "dispatch rows are the stand-in replica curve at "
+                    "the same fleet size for comparison",
+        },
+        "scenarios": [{**r, "violations": len(r["violations"])}
+                      for r in rows],
+        "dispatch_standin": dispatch_rows,
+    }
+    path = BENCH_PATH.with_suffix(".smoke.json") if smoke else BENCH_PATH
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {path}")
+    return path
+
+
+def _fmt(row) -> str:
+    nat = row["native"]
+    curve = ";".join(f"r{r}={row['sweep'][str(r)]['p99_ttft']:.3f}"
+                     for r in (0, 1, 2, 3))
+    return (f"e2e/{row['scenario']},{row['wall_s'] * 1e6:.0f},"
+            f"p99_ttft={nat['p99_ttft']:.3f};p99_lat={nat['p99_latency']:.3f};"
+            f"goodput={nat['goodput']:.4f};ok={nat['n_ok']}/"
+            f"{nat['n_requests']};deg={nat['n_degraded']};"
+            f"retries={row['retries']};viol={nat['violations']};{curve}")
+
+
+def main(smoke: bool = False, do_record: bool = False, names=None):
+    try:                  # package import (benchmarks/run.py harness) …
+        from benchmarks.serve_latency import run_dispatch
+    except ImportError:   # … or standalone `python benchmarks/e2e_load.py`
+        from serve_latency import run_dispatch
+    from repro.sim.scenario import SCENARIOS
+    n_req = SMOKE_REQUESTS if smoke else None
+    rows, fleet = run_scenarios(names=names, n_requests=n_req)
+    for row in rows:
+        print(_fmt(row), flush=True)
+    problems = check_rows(rows)
+    if do_record:
+        dispatch_rows = run_dispatch(200 if smoke else 2000,
+                                     n_replicas=fleet.n)
+        record(rows, dispatch_rows, smoke)
+    if names is None and set(SCENARIOS) - {r["scenario"] for r in rows}:
+        problems.append("not every registered scenario was replayed")
+    assert not problems, "; ".join(problems)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"truncate every scenario to {SMOKE_REQUESTS} "
+                         f"requests (CI)")
+    ap.add_argument("--record", action="store_true",
+                    help="write BENCH_e2e.json (BENCH_e2e.smoke.json "
+                         "under --smoke)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="replay only this scenario (repeatable)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, do_record=args.record, names=args.scenario)

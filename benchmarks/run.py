@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV. Module map:
   roofline             §Roofline terms from the dry-run artifacts
   serve_latency        first-(n-r) dispatch p99 vs r + paged-engine tok/s
   agg_throughput       GradAgg host-vs-fused-device iteration (BENCH_agg)
+  e2e_load             every named scenario vs real replicated engines
+                       (BENCH_e2e: goodput/p99 vs r under injected faults)
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: comm_time,staleness,byzantine,"
-                         "redundancy,roofline,serve,agg")
+                         "redundancy,roofline,serve,agg,e2e")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     ap.add_argument("--record", action="store_true",
@@ -72,6 +74,13 @@ def main() -> None:
                                            record=args.record))
        if args.fast
        else (lambda: agg_throughput.main(record=args.record)))
+
+    from benchmarks import e2e_load
+    # every scenario vs real replicated engines; a --fast --record run
+    # writes BENCH_e2e.smoke.json, never the committed full baseline
+    go("e2e", (lambda: e2e_load.main(smoke=True, do_record=args.record))
+       if args.fast
+       else (lambda: e2e_load.main(do_record=args.record)))
 
 
 if __name__ == "__main__":

@@ -54,16 +54,20 @@ def _replica_fn(j, request):
     return honest_tokens(request, length=16)
 
 
-def run_dispatch(n_requests: int = 2000, seed: int = 0):
+def run_dispatch(n_requests: int = 2000, seed: int = 0,
+                 n_replicas: int = N_REPLICAS):
+    """Stand-in replica p50/p99 vs r. ``n_replicas`` is overridable so
+    benchmarks/e2e_load.py can record this curve at the real fleet's
+    size next to the real-engine one."""
     rng = np.random.default_rng(seed)
     reqs = [rng.integers(0, 256, 8).astype(np.int32)
             for _ in range(n_requests)]
     rows = []
     for r in (0, 1, 2, 3):
-        lat = default_latency(N_REPLICAS, n_stragglers=3, factor=10.0,
+        lat = default_latency(n_replicas, n_stragglers=3, factor=10.0,
                               seed=3)
         d = RedundantDispatcher(
-            _replica_fn, DispatchConfig(n_replicas=N_REPLICAS, r=r),
+            _replica_fn, DispatchConfig(n_replicas=n_replicas, r=r),
             latency=lat)
         t0 = time.time()
         toks, lats = d.serve(reqs)
@@ -72,7 +76,8 @@ def run_dispatch(n_requests: int = 2000, seed: int = 0):
         toks_all, lats_all = d.serve(reqs, wait_for_all=True)
         match = all(np.array_equal(a, b) for a, b in zip(toks, toks_all))
         rows.append(dict(
-            r=r, p50=tail_latency(lats, 50), p99=tail_latency(lats, 99),
+            r=r, n_replicas=n_replicas, p50=tail_latency(lats, 50),
+            p99=tail_latency(lats, 99),
             p99_all=tail_latency(lats_all, 99), match=match, wall_s=wall))
     return rows
 

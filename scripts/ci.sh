@@ -32,6 +32,11 @@
 #          TP-meshed decode superstep vs the replicated engine
 #          (token-identical, GQA + MLA), then the sharded benchmark
 #          smokes (dp-sharded agg iteration + tp=2 serving parity).
+# Stage 10: e2e load harness (DESIGN.md §15) — mid-decode fault
+#          semantics on real engines + clock loadgen property fuzz,
+#          then every named scenario replayed against a real replicated
+#          fleet (--smoke --record writes BENCH_e2e.smoke.json, never
+#          the committed BENCH_e2e.json baseline).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -80,5 +85,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
     PYTHONPATH=src python benchmarks/agg_throughput.py --sharded --smoke
 XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
     PYTHONPATH=src python benchmarks/serve_latency.py --smoke --tp 2
+
+echo "== stage 10: e2e load harness (sim faults x real engines) =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_e2e_faults.py \
+    tests/test_property_clock.py
+JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/e2e_load.py \
+    --smoke --record
 
 echo "CI OK"

@@ -66,20 +66,34 @@ class DispatchResult:
 def honest_majority(n_used: int, n_byz: int) -> bool:
     """Vote soundness predicate (eq. (18) at the serving layer): the used
     reply set keeps a STRICT honest majority — a tie is not sound because
-    ``_majority_vote`` breaks ties toward the smallest token, which an
+    ``majority_vote`` breaks ties toward the smallest token, which an
     adversary can craft. The single source of truth for dispatch's
     ``quorum_honest`` and the sim harness's vote check."""
     return (n_used - n_byz) > n_used / 2
 
 
-def _majority_vote(streams: np.ndarray) -> np.ndarray:
+def majority_vote(streams: np.ndarray) -> np.ndarray:
     """(m, L) int -> (L,) per-position mode (ties -> smallest id, which is
-    deterministic and irrelevant under an honest majority)."""
+    deterministic and irrelevant under an honest majority). Shared by the
+    dispatcher and the e2e harness (repro.sim.e2e), so 'the vote' means
+    one thing at every layer."""
     out = np.empty(streams.shape[1], streams.dtype)
     for i in range(streams.shape[1]):
         vals, counts = np.unique(streams[:, i], return_counts=True)
         out[i] = vals[np.argmax(counts)]
     return out
+
+
+def corrupt_stream(tokens: np.ndarray, attack: Optional[str],
+                   rng: np.random.Generator) -> np.ndarray:
+    """What a Byzantine replica answers: the honest stream pushed through
+    ``core.byzantine.ATTACKS`` (eq. (17) at the serving layer) and
+    re-quantized to token ids. One helper so the dispatcher and the e2e
+    harness corrupt identically."""
+    if not attack:
+        return np.asarray(tokens, np.int64)
+    g = ATTACKS[attack](np.asarray(tokens, np.float64), rng)
+    return np.abs(np.rint(g)).astype(np.int64)
 
 
 class RedundantDispatcher:
@@ -126,10 +140,9 @@ class RedundantDispatcher:
         for j in chosen:
             toks = np.asarray(self.replica_fn(int(j), request), np.int64)
             if j in c.byz_ids and c.attack:
-                g = ATTACKS[c.attack](toks.astype(np.float64), self.rng)
-                toks = np.abs(np.rint(g)).astype(np.int64)
+                toks = corrupt_stream(toks, c.attack, self.rng)
             streams.append(toks)
-        tokens = _majority_vote(np.stack(streams)).astype(np.int32)
+        tokens = majority_vote(np.stack(streams)).astype(np.int32)
         round_latency = float(np.max(order_key[chosen]))
         self.now += round_latency
         n_byz_used = len({int(j) for j in chosen} & set(c.byz_ids))

@@ -105,7 +105,8 @@ class ServeEngine:
         # of merit is host_syncs / tokens ~ O(1/K) (DESIGN.md §12)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
                       "supersteps": 0, "host_syncs": 0,
-                      "admitted": 0, "retired": 0, "table_uploads": 0,
+                      "admitted": 0, "retired": 0, "aborted": 0,
+                      "table_uploads": 0,
                       "cache_hit_tokens": 0, "cache_miss_tokens": 0,
                       "suffix_steps": 0, "preemptions": 0, "resumed": 0,
                       "swapped_pages": 0, "cow_forks": 0,
@@ -390,6 +391,32 @@ class ServeEngine:
         self.kv.evict(slot)
         self.sched.retire(slot)
         self.stats["retired"] += 1
+
+    # -- fault surface (DESIGN.md §15) ---------------------------------
+    def abort(self, slot: int) -> RequestState:
+        """Kill one in-flight request: its pages are freed and its state
+        lands in ``sched.aborted`` — the generated-so-far tokens are
+        LOST, never answered. This is the mid-decode crash primitive the
+        e2e harness (repro.sim.e2e) drives; nothing else in the engine
+        may observe the difference (co-resident slots keep decoding the
+        same stream — regression-pinned in tests/test_e2e_faults.py)."""
+        st = self.sched.active[slot]
+        self.kv.evict(slot)
+        self.sched.abort(slot)
+        self.stats["aborted"] += 1
+        return st
+
+    def crash(self) -> List[int]:
+        """Whole-replica crash: every active request is aborted and the
+        waiting queue is dropped (a restarted server has neither). The
+        engine itself stays usable — params and the (now empty) page pool
+        survive, exactly like a process restart on warm weights. Returns
+        the rids whose work was lost."""
+        lost = [self.abort(slot).req.rid
+                for slot in list(self.sched.active)]
+        dropped = self.sched.drop_waiting()
+        self.stats["aborted"] += len(dropped)
+        return lost + [st.req.rid for st in dropped]
 
     def reset_prefix_cache(self) -> None:
         """Drop every index entry and reclaim parked pages (benchmarks:

@@ -87,6 +87,7 @@ class Scheduler:
         self.waiting: Deque[RequestState] = deque()
         self.active: Dict[int, RequestState] = {}       # slot -> state
         self.finished: Dict[int, RequestState] = {}     # rid -> state
+        self.aborted: Dict[int, RequestState] = {}      # rid -> state
         self.rejected: List[Tuple[Request, str]] = []
         self._free_slots: List[int] = list(range(ccfg.num_slots - 1, -1, -1))
         self.clock = 0.0                # advanced by the engine, 1 per step
@@ -207,6 +208,29 @@ class Scheduler:
         self.total_preempted += 1
         self.waiting.appendleft(st)
         return st
+
+    # -- fault surface (DESIGN.md §15) ------------------------------------
+    def abort(self, slot: int) -> RequestState:
+        """Kill an active request without completing it: the slot returns
+        to the pool and the state lands in ``aborted`` (never
+        ``finished``) with its partial ``generated`` stream intact for
+        post-mortems. The replica-crash primitive of the e2e harness —
+        in-flight tokens are *lost*, not answered."""
+        st = self.active.pop(slot)
+        self._free_slots.append(slot)
+        st.slot = -1
+        self.aborted[st.req.rid] = st
+        return st
+
+    def drop_waiting(self) -> List[RequestState]:
+        """Discard the whole waiting queue (a crashed replica loses its
+        queue along with its in-flight work); returns the dropped states,
+        also recorded in ``aborted``."""
+        dropped = list(self.waiting)
+        self.waiting.clear()
+        for st in dropped:
+            self.aborted[st.req.rid] = st
+        return dropped
 
     # -- decode bookkeeping ----------------------------------------------
     def superstep_k(self, cap: int) -> int:

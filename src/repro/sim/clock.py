@@ -82,11 +82,24 @@ class VirtualClock:
 
 def poisson_arrivals(clock: VirtualClock, rate: float, count: int,
                      seed: int, tag: str = "arrival",
-                     make_payload=None) -> List[Event]:
+                     make_payload=None, start: Optional[float] = None,
+                     ) -> List[Event]:
     """Schedule ``count`` seeded Poisson arrivals (exponential gaps at
-    ``rate`` per unit virtual time) starting from ``clock.now``."""
+    ``rate`` per unit virtual time) starting from ``start`` (default:
+    ``clock.now``).
+
+    ``start`` is the open-loop segment origin the e2e harness uses for
+    requeued bursts: a retry stream begins at the recovery time, not at
+    whatever ``now`` the previous drain left behind. The draw sequence is
+    a pure function of (seed, count) — ``start`` only translates it, so
+    two segments with the same seed emit identical gap sequences.
+    """
+    if not rate > 0.0:
+        raise ValueError(f"need arrival rate > 0, got {rate}")
+    if count < 0:
+        raise ValueError(f"need count >= 0, got {count}")
     rng = np.random.default_rng(seed)
-    t = clock.now
+    t = clock.now if start is None else float(start)
     out = []
     for i in range(count):
         t += float(rng.exponential(1.0 / rate))

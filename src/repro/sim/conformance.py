@@ -145,6 +145,42 @@ def check_vote(tokens: np.ndarray, honest: np.ndarray,
     return None
 
 
+def check_request_liveness(req_idx: int, n: int, r: int, deliverable: int,
+                           n_used: int, latency: float) -> Optional[str]:
+    """Serving twin of :func:`check_liveness` at request granularity
+    (e2e harness): whenever >= n-r replica copies were deliverable
+    (replica alive for the whole decode, reply not dropped), the
+    dispatcher must have answered from >= n-r of them in finite virtual
+    time. Fewer deliverable copies is the degraded regime — elastic
+    quorum shrink is the *expected* behavior there, not a violation."""
+    if deliverable < n - r:
+        return None               # degraded regime: liveness not promised
+    if not np.isfinite(latency):
+        return (f"request {req_idx}: unanswered (infinite latency) with "
+                f"{deliverable} deliverable replicas")
+    if n_used < n - r:
+        return (f"request {req_idx}: answered from only {n_used} replicas "
+                f"with {deliverable} deliverable (need n-r={n - r})")
+    return None
+
+
+def check_replica_agreement(streams, honest_ids, req_idx: int,
+                            ) -> Optional[str]:
+    """Honest replicas are deterministic copies of one greedy model, so
+    every delivered honest stream of a request must be token-identical —
+    across *real* engines this is the batch-composition-invariance claim
+    of DESIGN.md §9/§12 measured end to end (each replica decodes the
+    request against different co-resident batchmates and different page
+    tables)."""
+    hs = [np.asarray(streams[j]) for j in honest_ids if j in streams]
+    for a in hs[1:]:
+        if not np.array_equal(hs[0], a):
+            return (f"request {req_idx}: honest replicas disagree "
+                    f"(ids={sorted(honest_ids)}) — engine determinism or "
+                    f"batch-composition invariance broken")
+    return None
+
+
 def summarize(violations: List[str], limit: int = 5) -> str:
     head = violations[:limit]
     more = len(violations) - len(head)

@@ -110,6 +110,26 @@ class FaultSchedule:
         return not any(c.agent == j and c.start <= t1 and c.end > t0
                        for c in self.crashes)
 
+    def first_crash_start(self, j: int, t0: float,
+                          t1: float) -> Optional[float]:
+        """Earliest crash-window start for agent j inside ``(t0, t1]`` —
+        the mid-superstep query of the e2e harness: a window opening
+        while a decode superstep is in flight kills the step's tokens at
+        that instant. A window already open at ``t0`` is the *step-start*
+        case (``alive`` is false there), not a mid-step crash."""
+        starts = [c.start for c in self.crashes
+                  if c.agent == j and t0 < c.start <= t1 and c.end > c.start]
+        return min(starts) if starts else None
+
+    def next_recovery(self, j: int, now: float) -> float:
+        """Earliest time >= now at which agent j is outside every crash
+        window — where a crashed replica comes back empty. Chained /
+        overlapping windows are walked to a genuinely-alive instant."""
+        t = float(now)
+        while not self.alive(j, t):
+            t = min(c.end for c in self.crashes if c.dead(j, t))
+        return t
+
     def lat_multiplier(self, j: int, now: float) -> float:
         m = 1.0
         for ramp in self.ramps:

@@ -29,7 +29,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 GOLDEN_DIR = Path(__file__).resolve().parents[3] / "tests" / "golden"
-SMOKE_SCENARIOS = ("steady_state", "message_chaos")
+SMOKE_SCENARIOS = ("steady_state", "message_chaos", "e2e_steady")
 # stored verbatim: the first STORE_PREFIX steps + every STORE_STRIDE-th;
 # the digest still covers every step
 STORE_PREFIX = 20

@@ -228,6 +228,16 @@ register(Scenario(
     stragglers=(1, 4, 6), straggler_factor=20.0))
 
 register(Scenario(
+    name="e2e_steady",
+    description="Steady-state anchor of the e2e load harness "
+                "(repro.sim.e2e): no faults, r=2, a denser Poisson "
+                "request stream sized for real replicated ServeEngines. "
+                "The stand-in replay committed as its golden trace is "
+                "the reference the real-engine run is diffed against "
+                "(same arrivals, same vote rule).",
+    r=2, iters=200, seed=23, n_requests=32))
+
+register(Scenario(
     name="crash_cascade",
     description="Nested cascade of up to r=3 simultaneous crashes with "
                 "staggered recovery; convergence never leaves the "
@@ -362,17 +372,15 @@ def run_train(sc: Scenario, check: bool = True) -> TrainReport:
                        transport=transport, server=srv)
 
 
-def run_serve(sc: Scenario, check: bool = True) -> ServeReport:
-    """Drive ``serve.dispatch`` through the *same* scenario: identical
-    transport (fresh instance, same seed), Byzantine switches and r-churn
-    applied to the dispatcher, over a seeded Poisson request stream."""
-    transport = sc.make_transport()
-    cfg = DispatchConfig(n_replicas=sc.n_agents, r=sc.r,
-                         byz_ids=sc.byz_ids, attack=sc.attack, seed=sc.seed)
-    disp = RedundantDispatcher(lambda j, req: honest_tokens(req), cfg,
-                               transport=transport)
-    clock = VirtualClock()
-    rate = max(sc.n_requests / max(sc.horizon, 1.0), 1e-6)
+def request_loadgen(sc: Scenario):
+    """The scenario's request-payload factory — the *loadgen seam*
+    (DESIGN.md §15): ``run_serve`` and the e2e harness
+    (:mod:`repro.sim.e2e`) both draw their open-loop Poisson request
+    streams through this one function, so 'the workload' of a scenario
+    is a single pure function of (scenario, seed) no matter which stack
+    replays it. Payload token ids live in [0, 256) — valid prompts for
+    every ``reduced()`` registry arch (vocab 256), which is what lets the
+    identical byte stream drive the honest stand-in AND real engines."""
     if sc.prefix_share > 0.0:
         # shared-prefix mix: one common prompt prefix drawn up front,
         # then per-arrival coin flips — same rng discipline as
@@ -387,11 +395,45 @@ def run_serve(sc: Scenario, check: bool = True) -> ServeReport:
                 return np.concatenate([shared, suffix])
             return rng.integers(0, 256,
                                 sc.prefix_len + sc.suffix_len).astype(np.int32)
-    else:                 # original unique-payload stream, byte-identical
-        make_payload = lambda i, rng: rng.integers(0, 256, 8).astype(np.int32)
+        return make_payload
+    # original unique-payload stream, byte-identical
+    return lambda i, rng: rng.integers(0, 256, 8).astype(np.int32)
+
+
+def arrival_rate(sc: Scenario) -> float:
+    """Open-loop Poisson rate shared by both serve replays."""
+    return max(sc.n_requests / max(sc.horizon, 1.0), 1e-6)
+
+
+def run_serve(sc: Scenario, check: bool = True,
+              replica_fn=None, honest_ref=None) -> ServeReport:
+    """Drive ``serve.dispatch`` through the *same* scenario: identical
+    transport (fresh instance, same seed), Byzantine switches and r-churn
+    applied to the dispatcher, over a seeded Poisson request stream.
+
+    ``replica_fn(j, request) -> (L,) int32`` is the injectable replica
+    payload factory; the default is the :func:`honest_tokens` stand-in,
+    byte-identical to the pre-seam runner (golden traces replay
+    unchanged). ``honest_ref(request)`` is the clean stream the vote
+    check compares against — it must be what an *honest* replica
+    returns; the default mirrors the default ``replica_fn``."""
+    if replica_fn is None:
+        replica_fn = lambda j, req: honest_tokens(req)
+        if honest_ref is None:
+            honest_ref = honest_tokens
+    elif honest_ref is None:
+        # honest replicas are id-independent by contract; corruption is
+        # applied by the dispatcher *after* replica_fn, so any replica id
+        # yields the honest stream
+        honest_ref = lambda req: replica_fn(0, req)
+    transport = sc.make_transport()
+    cfg = DispatchConfig(n_replicas=sc.n_agents, r=sc.r,
+                         byz_ids=sc.byz_ids, attack=sc.attack, seed=sc.seed)
+    disp = RedundantDispatcher(replica_fn, cfg, transport=transport)
+    clock = VirtualClock()
     poisson_arrivals(
-        clock, rate, sc.n_requests, seed=sc.seed + 1, tag="request",
-        make_payload=make_payload)
+        clock, arrival_rate(sc), sc.n_requests, seed=sc.seed + 1,
+        tag="request", make_payload=request_loadgen(sc))
     for (at, kind, ev) in sc.faults.control_events():
         clock.schedule_at(at, kind, ev)
 
@@ -427,7 +469,7 @@ def run_serve(sc: Scenario, check: bool = True) -> ServeReport:
             continue
         lats.append(res.round_latency)
         if check and sc.expect.vote_exact:
-            v = conformance.check_vote(res.tokens, honest_tokens(ev),
+            v = conformance.check_vote(res.tokens, honest_ref(ev),
                                        res.used, disp.cfg.byz_ids, req_idx)
             if v:
                 violations.append(v)

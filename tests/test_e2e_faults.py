@@ -1,0 +1,287 @@
+"""Mid-decode fault semantics, engine-level and end-to-end (DESIGN.md §15).
+
+The e2e harness's whole claim is that sim fault primitives act on *real*
+decode supersteps. These tests pin the contract at both layers:
+
+- engine level: ``abort`` / ``crash`` lose in-flight tokens, free pages,
+  drop the waiting queue, and leave the engine reusable (a recovered
+  replica rejoins empty but healthy);
+- harness level: a crashed replica's copies are lost and the dispatcher
+  requeues on total outage, stragglers are hidden by first-(n-r),
+  Byzantine replicas are outvoted, ``quorum_honest`` flags a lost honest
+  majority, and the whole replay is deterministic on a reused fleet.
+"""
+import numpy as np
+import pytest
+
+from repro.sim.e2e import (DELIVERED, LOST, E2EConfig, E2ERequest,
+                           EngineFleet, _run_replica, make_arrivals,
+                           run_e2e)
+from repro.sim.faults import (CrashWindow, FaultSchedule, MessageFaults,
+                              StragglerRamp)
+from repro.sim.scenario import Scenario, run_serve
+
+
+def tiny(name, **kw):
+    kw.setdefault("n_agents", 4)
+    kw.setdefault("r", 1)
+    kw.setdefault("iters", 30)
+    kw.setdefault("seed", 7)
+    kw.setdefault("n_requests", 6)
+    return Scenario(name=name, description="e2e fault-semantics fixture",
+                    **kw)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """One shared 4-replica fleet; every test must leave it drained."""
+    return EngineFleet(4)
+
+
+@pytest.fixture(autouse=True)
+def _drained(fleet):
+    yield
+    assert fleet.drained(), "test leaked in-flight requests into the fleet"
+
+
+def _prompt(seed, n=8):
+    return np.random.default_rng(seed).integers(0, 256, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine level
+
+def test_abort_loses_inflight_tokens_and_frees_slot(fleet):
+    eng = fleet.engines[0]
+    free0 = eng.kv.available_pages
+    rid = eng.submit(_prompt(0), 8)
+    other = eng.submit(_prompt(1), 8)
+    eng.step()                          # prefill + first superstep
+    (slot,) = [s for s, st in eng.sched.active.items()
+               if st.req.rid == rid]
+    partial = len(eng.sched.active[slot].generated)
+    assert partial >= 1
+    st = eng.abort(slot)
+    assert st.req.rid == rid
+    assert rid in eng.sched.aborted
+    assert rid not in eng.sched.finished
+    assert len(st.generated) == partial  # tokens kept for forensics only
+    eng.run()                            # the survivor still drains
+    assert other in eng.sched.finished
+    assert rid not in eng.sched.finished
+    assert eng.kv.available_pages == free0
+
+
+def test_crash_drops_active_and_waiting(fleet):
+    eng = fleet.engines[1]
+    free0 = eng.kv.available_pages
+    aborted0 = eng.stats["aborted"]
+    rids = [eng.submit(_prompt(10 + i), 8) for i in range(4)]
+    eng.step()                           # 2 slots active, 2 waiting
+    lost = eng.crash()
+    assert sorted(lost) == sorted(rids)  # in-flight AND queued all lost
+    assert eng.sched.idle
+    assert eng.kv.available_pages == free0
+    assert eng.stats["aborted"] == aborted0 + 4
+    assert not any(r in eng.sched.finished for r in rids)
+
+
+def test_recovered_engine_is_deterministic(fleet):
+    """A replica that crashed and rejoined must produce the same stream
+    as a never-crashed replica — crash leaves no hidden decode state."""
+    crashed, clean = fleet.engines[0], fleet.engines[2]
+    crashed.submit(_prompt(20), 8)
+    crashed.step()
+    crashed.crash()
+    p = _prompt(21)
+    ra = crashed.submit(p, 8)
+    rb = clean.submit(p, 8)
+    crashed.run()
+    clean.run()
+    assert crashed.sched.finished[ra].generated \
+        == clean.sched.finished[rb].generated
+
+
+def test_mid_superstep_crash_loses_the_steps_tokens(fleet):
+    """A crash window opening while a superstep is in flight kills the
+    whole step: the copy is lost at the crash instant even though the
+    engine had already produced tokens for it."""
+    eng = fleet.engines[3]
+    sched = FaultSchedule(crashes=(CrashWindow(agent=0, start=0.05,
+                                               end=5.0),))
+    sc = tiny("t_midstep", faults=sched)
+    transport = sc.make_transport()
+    req0 = E2ERequest(idx=0, prompt=_prompt(30), arrival=0.0,
+                      first_arrival=0.0)
+    req1 = E2ERequest(idx=1, prompt=_prompt(31), arrival=9.0,
+                      first_arrival=9.0)
+    for rq in (req0, req1):
+        rq.max_new = 8
+    t = _run_replica(0, eng, [(0.0, req0), (9.0, req1)], transport,
+                     sched, fleet.ecfg)
+    c0, c1 = req0.copies[0], req1.copies[0]
+    assert c0.status == LOST
+    assert c0.t_lost == pytest.approx(0.05)   # the crash instant
+    assert np.isinf(c0.t_done) and c0.tokens is None
+    assert c1.status == DELIVERED             # post-recovery arrival is fine
+    assert c1.t_done > 9.0
+    assert t >= c1.t_done
+
+
+def test_dead_replica_loses_arrivals_on_arrival(fleet):
+    eng = fleet.engines[0]
+    sched = FaultSchedule(crashes=(CrashWindow(agent=0, start=0.0,
+                                               end=100.0),))
+    sc = tiny("t_doa", faults=sched)
+    req = E2ERequest(idx=0, prompt=_prompt(40), arrival=1.0,
+                     first_arrival=1.0)
+    req.max_new = 8
+    _run_replica(0, eng, [(1.0, req)], sc.make_transport(), sched,
+                 fleet.ecfg)
+    assert req.copies[0].status == LOST
+    assert req.copies[0].t_lost == 1.0
+    assert eng.sched.idle                     # never even reached the engine
+
+
+# ---------------------------------------------------------------------------
+# harness level
+
+def test_total_outage_requeues_and_recovers(fleet):
+    """All replicas dead at the start: early requests lose every copy,
+    get requeued at the fleet's recovery instant, and complete — no
+    conformance violation, because elastic degrade + retry IS the
+    promised behavior."""
+    sched = FaultSchedule(crashes=tuple(
+        CrashWindow(agent=j, start=0.0, end=12.0) for j in range(4)))
+    rep = run_e2e(tiny("t_outage", faults=sched), fleet=fleet)
+    retried = [q for q in rep.requests if q.retries > 0]
+    assert retried, "no request ever hit the outage window"
+    for q in retried:
+        assert q.arrival >= 12.0              # re-fanned out at recovery
+        assert q.delivered()                  # and answered afterwards
+    assert rep.native.n_unanswered == 0
+    assert rep.violations == []
+
+
+def test_single_crash_degrades_quorum_not_liveness(fleet):
+    """One replica down the whole run: at the native r>=1 the first-(n-r)
+    rule absorbs it; at r=0 every request is answered from a degraded
+    (elastic) quorum — counted, but never a liveness violation."""
+    sched = FaultSchedule(crashes=(CrashWindow(agent=0, start=0.0,
+                                               end=1e9),))
+    rep = run_e2e(tiny("t_onecrash", faults=sched), fleet=fleet)
+    assert rep.violations == []
+    assert rep.native.n_degraded == 0         # r=1 absorbs the crash
+    assert rep.sweep[0].n_degraded == len(rep.requests)
+    assert rep.sweep[0].n_unanswered == 0
+    for q in rep.requests:
+        assert q.copies[0].status == LOST
+        assert len(q.delivered()) == 3
+
+
+def test_straggler_hidden_by_redundancy(fleet):
+    """p99 TTFT must improve monotonically with r when one replica
+    straggles hard — the paper's tail-latency claim, measured on real
+    engine supersteps."""
+    sched = FaultSchedule(ramps=(
+        StragglerRamp(agents=(1,), start=0.0, end=1e9, factor=30.0),))
+    rep = run_e2e(tiny("t_straggle", faults=sched, n_requests=8),
+                  fleet=fleet)
+    p99 = [rep.sweep[r].p99_ttft for r in (0, 1, 2, 3)]
+    assert all(a >= b for a, b in zip(p99, p99[1:]))
+    assert p99[1] < p99[0]                    # r=1 strictly hides the slow one
+    assert rep.violations == []
+
+
+def test_byzantine_outvoted_by_majority(fleet):
+    rep = run_e2e(tiny("t_byz", byz_ids=(0,), attack="sign_flip"),
+                  fleet=fleet)
+    assert rep.violations == []
+    assert rep.native.n_ok == len(rep.requests)
+
+
+def test_quorum_honest_flags_lost_majority(fleet):
+    """Every replica Byzantine: the vote output is untrustworthy and the
+    harness must SAY so for every request, not silently answer."""
+    rep = run_e2e(tiny("t_allbyz", byz_ids=(0, 1, 2, 3),
+                       attack="sign_flip"), fleet=fleet)
+    assert rep.native.n_ok == 0
+    assert len(rep.violations) == len(rep.requests)
+    assert all("honest majority" in v for v in rep.violations)
+
+
+def test_dropped_replies_shrink_quorum_elastically(fleet):
+    rep = run_e2e(tiny("t_drops", faults=FaultSchedule(
+        messages=MessageFaults(drop_p=0.3))), fleet=fleet)
+    assert rep.violations == []
+    dropped = sum(1 for q in rep.requests for c in q.copies.values()
+                  if c.status == "dropped")
+    assert dropped > 0, "drop_p=0.3 never dropped a reply"
+    assert rep.native.n_unanswered == 0
+
+
+def test_replay_is_deterministic_on_a_reused_fleet(fleet):
+    """Same scenario twice on the same warm fleet: bit-identical
+    outcomes — engine reuse leaks no state into the replay."""
+    sc = tiny("t_det", faults=FaultSchedule(
+        messages=MessageFaults(drop_p=0.1, reorder_jitter=0.2)))
+    a = run_e2e(sc, fleet=fleet)
+    b = run_e2e(sc, fleet=fleet)
+    assert a.native.as_dict() == b.native.as_dict()
+    for qa, qb in zip(a.requests, b.requests):
+        for j in qa.copies:
+            ca, cb = qa.copies[j], qb.copies[j]
+            assert (ca.status, ca.t_first, ca.t_done) \
+                == (cb.status, cb.t_first, cb.t_done)
+            if ca.tokens is not None:
+                assert np.array_equal(ca.tokens, cb.tokens)
+
+
+def test_honest_replicas_agree_across_batch_compositions(fleet):
+    """Each replica decodes the same requests against different
+    co-resident batchmates (staggered by faults); delivered honest
+    streams must still be token-identical — batch-composition invariance
+    measured end to end."""
+    sched = FaultSchedule(ramps=(
+        StragglerRamp(agents=(2,), start=0.0, end=1e9, factor=10.0),))
+    rep = run_e2e(tiny("t_agree", faults=sched), fleet=fleet)
+    assert rep.violations == []
+    for q in rep.requests:
+        toks = [c.tokens for c in q.delivered()]
+        for t in toks[1:]:
+            assert np.array_equal(toks[0], t)
+
+
+# ---------------------------------------------------------------------------
+# the loadgen seam (satellite: injectable payload factory)
+
+def test_run_serve_replica_fn_seam():
+    """run_serve accepts an injectable replica payload factory; the vote
+    check follows the injected honest reference."""
+    sc = tiny("t_seam")
+
+    def replica_fn(j, req):
+        return (np.asarray(req, np.int64)[:8] % 7).astype(np.int64)
+
+    rep = run_serve(sc, replica_fn=replica_fn)
+    assert rep.violations == []
+    assert len(rep.trace) == sc.n_requests
+
+
+def test_e2e_and_standin_share_the_request_stream():
+    """The loadgen seam contract: make_arrivals draws the exact byte
+    stream run_serve's Poisson loop replays (same seed, same payloads),
+    so the real-engine harness and the stand-in see one workload."""
+    from repro.sim.clock import VirtualClock, poisson_arrivals
+    from repro.sim.scenario import arrival_rate, request_loadgen
+    sc = tiny("t_stream", n_requests=5)
+    reqs = make_arrivals(sc, 8)
+    clock = VirtualClock()
+    evs = poisson_arrivals(clock, arrival_rate(sc), sc.n_requests,
+                           seed=sc.seed + 1, tag="request",
+                           make_payload=request_loadgen(sc))
+    assert len(reqs) == 5
+    for q, ev in zip(reqs, evs):
+        assert q.arrival == ev.time
+        assert np.array_equal(q.prompt, np.asarray(ev.payload, np.int32))
+        assert q.prompt.min() >= 0 and q.prompt.max() < 256
