@@ -16,7 +16,12 @@ is re-run at the same fleet size so BENCH_e2e.json carries both the
 simulated-replica and the real-engine r-curves side by side.
 
     PYTHONPATH=src python benchmarks/e2e_load.py [--smoke] [--record] \
-        [--scenario NAME ...]
+        [--scenario NAME ...] [--fleet]
+
+``--fleet`` additionally replays the fault scenarios through the fleet
+controller (``repro.sim.fleet_e2e``: phi-accrual detection, hedged
+re-dispatch, checkpoint-based rejoin) and gates crash_cascade /
+rolling_restart on post-rejoin recovery and zero permanent loss.
 
 ``--record`` writes BENCH_e2e.json; under ``--smoke`` it writes
 BENCH_e2e.smoke.json instead so a reduced sweep never clobbers the
@@ -37,6 +42,18 @@ BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 # everywhere else they fail the gate
 EXPECT_VIOLATIONS: tuple = ()
 SMOKE_REQUESTS = 4
+
+# fault scenarios additionally replayed through the fleet controller
+# (repro.sim.fleet_e2e): detection + hedged re-dispatch + checkpoint
+# rejoin instead of the oracle retry loop
+FLEET_SCENARIOS = ("crash_cascade", "rolling_restart", "partition_heal",
+                   "churn_elastic")
+# scenarios whose post-rejoin window must recover >= this fraction of the
+# pre-fault success rate (full runs only: smoke truncation leaves the
+# post-rejoin window without arrivals, making the ratio undefined)
+FLEET_RECOVERY_GATED = ("crash_cascade", "rolling_restart")
+FLEET_RECOVERED_MIN = 0.9
+FLEET_SMOKE_REQUESTS = 16
 
 
 def run_scenarios(names=None, n_requests=None, fleet=None, log=print):
@@ -74,6 +91,59 @@ def run_scenarios(names=None, n_requests=None, fleet=None, log=print):
     return rows, fleet
 
 
+def run_fleet_scenarios(names=None, n_requests=None, fleet=None, log=print):
+    from repro.sim.e2e import EngineFleet
+    from repro.sim.fleet_e2e import run_fleet_e2e
+    from repro.sim.scenario import get_scenario
+
+    names = list(names) if names else list(FLEET_SCENARIOS)
+    scs = [get_scenario(n) for n in names]
+    if fleet is None:
+        fleet = EngineFleet(scs[0].n_agents)
+    rows = []
+    for sc in scs:
+        t0 = time.time()
+        rep = run_fleet_e2e(sc, fleet=fleet, n_requests=n_requests)
+        wall = time.time() - t0
+        if n_requests is not None and n_requests < sc.n_requests:
+            log(f"# fleet/{sc.name}: truncated to {n_requests}/"
+                f"{sc.n_requests} requests (smoke)")
+        rows.append(dict(
+            scenario=sc.name, wall_s=wall,
+            n_requests=len(rep.requests), r_native=sc.r,
+            native=rep.native.as_dict(),
+            sweep={str(r): row.as_dict() for r, row in rep.sweep.items()},
+            fleet=rep.metrics.as_dict(),
+            violations=rep.violations))
+    return rows, fleet
+
+
+def check_fleet_rows(rows, smoke: bool) -> list:
+    """§16 acceptance gates: conformance clean (no permanent loss with
+    >= n-r survivors, no vote below the 2f+1 floor), and on full runs
+    the gated scenarios' post-rejoin success rate must recover to >=
+    FLEET_RECOVERED_MIN of the pre-fault rate with zero requests
+    permanently lost."""
+    import math
+    problems = []
+    for row in rows:
+        name, m = row["scenario"], row["fleet"]
+        if row["violations"]:
+            problems.append(f"fleet/{name}: {len(row['violations'])} "
+                            f"violations: {row['violations'][:3]}")
+        if smoke:
+            continue
+        if m["permanently_lost"]:
+            problems.append(f"fleet/{name}: {m['permanently_lost']} "
+                            f"requests permanently lost")
+        if name in FLEET_RECOVERY_GATED:
+            rec = m["recovered"]
+            if not (math.isfinite(rec) and rec >= FLEET_RECOVERED_MIN):
+                problems.append(f"fleet/{name}: post-rejoin recovery "
+                                f"{rec} < {FLEET_RECOVERED_MIN}")
+    return problems
+
+
 def check_rows(rows) -> list:
     """The acceptance gates of DESIGN.md §15, machine-checked at record
     time so a drifted BENCH_e2e.json can never be committed quietly:
@@ -97,7 +167,8 @@ def check_rows(rows) -> list:
     return problems
 
 
-def record(rows, dispatch_rows, smoke: bool) -> pathlib.Path:
+def record(rows, dispatch_rows, smoke: bool,
+           fleet_rows=None) -> pathlib.Path:
     import jax
     from repro.sim.e2e import E2EConfig
     ecfg = E2EConfig()
@@ -120,6 +191,9 @@ def record(rows, dispatch_rows, smoke: bool) -> pathlib.Path:
                       for r in rows],
         "dispatch_standin": dispatch_rows,
     }
+    if fleet_rows is not None:
+        payload["fleet"] = [{**r, "violations": len(r["violations"])}
+                            for r in fleet_rows]
     path = BENCH_PATH.with_suffix(".smoke.json") if smoke else BENCH_PATH
     path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
     print(f"wrote {path}")
@@ -137,7 +211,23 @@ def _fmt(row) -> str:
             f"retries={row['retries']};viol={nat['violations']};{curve}")
 
 
-def main(smoke: bool = False, do_record: bool = False, names=None):
+def _fmt_fleet(row) -> str:
+    m = row["fleet"]
+    nat = row["native"]
+    return (f"fleet/{row['scenario']},{row['wall_s'] * 1e6:.0f},"
+            f"deaths={m['deaths']};rejoins={m['rejoins']};"
+            f"restarts={m['restarts']};hedges={m['hedges']};"
+            f"retries={m['retries']};shed={m['shed']};"
+            f"lost={m['permanently_lost']};"
+            f"rec_t={m['recovery_time_mean']:.2f}/{m['recovery_time_max']:.2f};"
+            f"recovered={m['recovered']:.3f};"
+            f"goodput={m['goodput_pre']:.4f}->{m['goodput_post']:.4f};"
+            f"ok={nat['n_ok']}/{nat['n_requests']};"
+            f"viol={nat['violations']}")
+
+
+def main(smoke: bool = False, do_record: bool = False, names=None,
+         fleet_mode: bool = False):
     try:                  # package import (benchmarks/run.py harness) …
         from benchmarks.serve_latency import run_dispatch
     except ImportError:   # … or standalone `python benchmarks/e2e_load.py`
@@ -148,10 +238,21 @@ def main(smoke: bool = False, do_record: bool = False, names=None):
     for row in rows:
         print(_fmt(row), flush=True)
     problems = check_rows(rows)
+    fleet_rows = None
+    if fleet_mode:
+        fnames = [n for n in (names or FLEET_SCENARIOS)
+                  if n in FLEET_SCENARIOS]
+        if fnames:
+            fleet_rows, _ = run_fleet_scenarios(
+                names=fnames, fleet=fleet,
+                n_requests=FLEET_SMOKE_REQUESTS if smoke else None)
+            for row in fleet_rows:
+                print(_fmt_fleet(row), flush=True)
+            problems += check_fleet_rows(fleet_rows, smoke)
     if do_record:
         dispatch_rows = run_dispatch(200 if smoke else 2000,
                                      n_replicas=fleet.n)
-        record(rows, dispatch_rows, smoke)
+        record(rows, dispatch_rows, smoke, fleet_rows=fleet_rows)
     if names is None and set(SCENARIOS) - {r["scenario"] for r in rows}:
         problems.append("not every registered scenario was replayed")
     assert not problems, "; ".join(problems)
@@ -167,5 +268,11 @@ if __name__ == "__main__":
                          "under --smoke)")
     ap.add_argument("--scenario", action="append", default=None,
                     help="replay only this scenario (repeatable)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="additionally replay the fault scenarios through "
+                         "the fleet controller (detection + hedged "
+                         "re-dispatch + checkpoint rejoin) and gate on "
+                         "recovery metrics")
     args = ap.parse_args()
-    main(smoke=args.smoke, do_record=args.record, names=args.scenario)
+    main(smoke=args.smoke, do_record=args.record, names=args.scenario,
+         fleet_mode=args.fleet)

@@ -92,4 +92,10 @@ JAX_PLATFORMS=cpu python -m pytest -q tests/test_e2e_faults.py \
 JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/e2e_load.py \
     --smoke --record
 
+echo "== stage 11: fleet health & recovery (detector + chaos smoke) =="
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_fleet.py \
+    tests/test_fleet_e2e.py tests/test_elastic.py
+JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/e2e_load.py \
+    --smoke --fleet --scenario crash_cascade --scenario rolling_restart
+
 echo "CI OK"

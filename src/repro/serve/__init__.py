@@ -16,6 +16,11 @@ Layers (DESIGN.md §9, §13):
 - ``dispatch``  the paper's first-(n-r) waiting rule (Algorithm 1)
                 applied to replicated inference, with Byzantine-replica
                 majority vote.
+- ``fleet``     fleet health & recovery (DESIGN.md §16): phi-accrual
+                failure detection driving a per-replica health state
+                machine, deadline-hedged dispatch with elastic quorum
+                degrade to the vote floor, and checkpoint-based rejoin
+                with catch-up probation.
 """
 from repro.serve.kv_cache import (PageAllocator, PagedCacheConfig,
                                   PagedKVCache, SwapState, pages_needed)
@@ -23,11 +28,16 @@ from repro.serve.prefix import PrefixIndex, PrefixPlan, chunk_hashes
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.engine import ServeEngine
 from repro.serve.dispatch import (DispatchConfig, DispatchResult,
-                                  RedundantDispatcher)
+                                  NoQuorumError, RedundantDispatcher)
+from repro.serve.fleet import (FleetConfig, FleetController,
+                               HedgedDispatcher, PhiAccrualDetector,
+                               vote_floor)
 
 __all__ = [
     "PageAllocator", "PagedCacheConfig", "PagedKVCache", "SwapState",
     "pages_needed", "PrefixIndex", "PrefixPlan", "chunk_hashes",
     "Request", "RequestState", "Scheduler", "ServeEngine",
-    "DispatchConfig", "DispatchResult", "RedundantDispatcher",
+    "DispatchConfig", "DispatchResult", "NoQuorumError",
+    "RedundantDispatcher", "FleetConfig", "FleetController",
+    "HedgedDispatcher", "PhiAccrualDetector", "vote_floor",
 ]

@@ -33,6 +33,28 @@ from repro.core.async_engine import (DefaultTransport, LatencyModel,
 from repro.core.byzantine import ATTACKS
 
 
+class NoQuorumError(RuntimeError):
+    """Total outage: zero replicas could deliver this request right now.
+
+    Typed so callers (``sim.scenario.run_serve``, the fleet controller)
+    can requeue programmatically instead of string-matching a bare
+    RuntimeError. Subclasses RuntimeError so pre-existing ``except
+    RuntimeError`` handlers keep working unchanged.
+
+    Attributes: ``rid`` (the dispatcher's request counter at failure),
+    ``deliverable`` (how many replicas could have answered — 0 for the
+    classic outage, >0 when a fleet controller gave up below its vote
+    floor), ``wait`` (the quorum the dispatch was trying to fill).
+    """
+
+    def __init__(self, rid: int, deliverable: int, wait: int,
+                 msg: str = "no live replica reachable — request lost"):
+        super().__init__(msg)
+        self.rid = int(rid)
+        self.deliverable = int(deliverable)
+        self.wait = int(wait)
+
+
 @dataclasses.dataclass(frozen=True)
 class DispatchConfig:
     n_replicas: int
@@ -76,12 +98,25 @@ def majority_vote(streams: np.ndarray) -> np.ndarray:
     """(m, L) int -> (L,) per-position mode (ties -> smallest id, which is
     deterministic and irrelevant under an honest majority). Shared by the
     dispatcher and the e2e harness (repro.sim.e2e), so 'the vote' means
-    one thing at every layer."""
-    out = np.empty(streams.shape[1], streams.dtype)
-    for i in range(streams.shape[1]):
-        vals, counts = np.unique(streams[:, i], return_counts=True)
-        out[i] = vals[np.argmax(counts)]
-    return out
+    one thing at every layer.
+
+    Batched: one (m, m, L) equality reduction instead of L interpreter
+    round-trips through ``np.unique`` — m is the reply quorum (<= n, a
+    handful), so the m^2 factor is noise next to the per-position Python
+    loop it replaces. Tie-break preserved exactly: among the values of
+    maximal multiplicity in a column, the smallest wins (``np.unique``
+    returns sorted values, so ``argmax`` picked the first == smallest).
+    """
+    s = np.asarray(streams)
+    if s.shape[1] == 0:
+        return np.empty(0, s.dtype)
+    s64 = s.astype(np.int64, copy=False)
+    counts = (s64[None, :, :] == s64[:, None, :]).sum(axis=1)   # (m, L)
+    maxc = counts.max(axis=0)
+    # among max-count rows take the smallest value; non-candidates are
+    # masked to +inf-equivalent (int64 max, unreachable for token ids)
+    cand = np.where(counts == maxc[None, :], s64, np.iinfo(np.int64).max)
+    return cand.min(axis=0).astype(s.dtype)
 
 
 def corrupt_stream(tokens: np.ndarray, attack: Optional[str],
@@ -115,6 +150,7 @@ class RedundantDispatcher:
             latency or default_latency(cfg.n_replicas))
         self.rng = np.random.default_rng(cfg.seed)
         self.now = 0.0                      # virtual wall clock of the fleet
+        self._rid = 0                       # dispatch counter (NoQuorumError)
 
     def dispatch(self, request: np.ndarray,
                  wait_for_all: bool = False) -> DispatchResult:
@@ -130,10 +166,12 @@ class RedundantDispatcher:
         # inf = unreachable this round (crashed replica / dropped reply);
         # degrade elastically like the training engine's S^t
         deliverable = int(np.isfinite(order_key).sum())
-        wait = c.n_replicas if wait_for_all else c.n_replicas - c.r
-        wait = min(wait, deliverable)
+        want = c.n_replicas if wait_for_all else c.n_replicas - c.r
+        wait = min(want, deliverable)
+        rid = self._rid
+        self._rid += 1
         if wait == 0:
-            raise RuntimeError("no live replica reachable — request lost")
+            raise NoQuorumError(rid, deliverable, want)
         chosen = np.argsort(order_key)[:wait]
 
         streams = []
@@ -166,6 +204,7 @@ class RedundantDispatcher:
     def reseed(self) -> None:
         self.rng = np.random.default_rng(self.cfg.seed)
         self.now = 0.0
+        self._rid = 0
         self.transport.reset()
 
 

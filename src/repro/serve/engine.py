@@ -424,6 +424,65 @@ class ServeEngine:
         if self.kv.prefix is not None:
             self.kv.prefix.clear()
 
+    # -- checkpoint-based restart (DESIGN.md §16) ----------------------
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Restartable host image of the engine's data plane: every KV
+        pool leaf plus the page table / lengths / monotone rid counter,
+        flat-keyed for ``repro.checkpoint.Checkpointer``. Idle-only by
+        contract — in-flight requests are never checkpointable (a
+        crashed replica loses them via :meth:`crash` and the fleet
+        controller requeues; DESIGN.md §16), so the image is exactly
+        what a restarted process can honestly restore."""
+        if not self.sched.idle:
+            raise RuntimeError("snapshot requires a drained engine — "
+                               "crash() or drain first")
+        flat: Dict[str, np.ndarray] = {
+            "page_table": self.kv.page_table.copy(),
+            "kv_lens": self.kv.kv_lens.copy(),
+            "next_rid": np.asarray(self._next_rid, np.int64),
+        }
+        for pos, blk in enumerate(self.kv.cache):
+            for part in ("mixer", "ffn"):
+                for name, leaf in blk[part].items():
+                    flat[f"kv/{pos}/{part}/{name}"] = np.asarray(leaf)
+        return flat
+
+    def restart(self, image: Optional[Dict[str, np.ndarray]] = None
+                ) -> None:
+        """Process-restart twin: throw away the scheduler and the paged
+        cache, rebuild them fresh, and (with ``image``) reload the KV
+        pools from a :meth:`snapshot` taken earlier — the checkpoint-
+        based rejoin path of the fleet controller. The jitted programs
+        survive (same shapes), the rid counter stays monotone across
+        the restart (max of live and image — a rejoined replica must
+        never reuse a rid the fleet already tracked), and a prefix
+        cache restarts cold (its hash index is not part of the image)."""
+        self.kv = PagedKVCache(self.infer_cfg, self.ccfg,
+                               enable_prefix=(self.prefix_cache == "on"),
+                               mesh=self.mesh, rules=self.rules)
+        self.sched = Scheduler(self.ccfg, policy=self.sched.policy)
+        if image is not None:
+            blocks = list(self.kv.cache)
+            for pos, kind in enumerate(self.infer_cfg.layer_pattern):
+                blk = dict(blocks[pos])
+                for part in ("mixer", "ffn"):
+                    loaded = {}
+                    for name, leaf in blk[part].items():
+                        arr = jnp.asarray(image[f"kv/{pos}/{part}/{name}"],
+                                          leaf.dtype)
+                        if self.mesh is not None:
+                            arr = jax.device_put(arr, leaf.sharding)
+                        loaded[name] = arr
+                    blk[part] = loaded
+                blocks[pos] = blk
+            self.kv.cache = tuple(blocks)
+            self.kv.page_table = np.asarray(image["page_table"],
+                                            np.int32).copy()
+            self.kv.kv_lens = np.asarray(image["kv_lens"], np.int32).copy()
+            self.kv._tables_dirty = True
+            self._next_rid = max(self._next_rid, int(image["next_rid"]))
+        self.stats["restarts"] = self.stats.get("restarts", 0) + 1
+
     def step(self) -> None:
         """One serving step: admit -> preempt (sla) -> decode superstep
         -> commit/retire.

@@ -164,6 +164,35 @@ def check_request_liveness(req_idx: int, n: int, r: int, deliverable: int,
     return None
 
 
+def check_vote_floor(req_idx: int, n_used: int, n_byz: int) -> Optional[str]:
+    """Fleet-controller soundness floor (DESIGN.md §16): the elastic
+    quorum may shrink under churn, but a vote consumed from fewer than
+    ``2f+1`` replies could be outvoted if all ``f`` Byzantine replicas
+    made the used set — the controller must park or retry the request
+    instead. The floor formula is ``serve.fleet.vote_floor``; inlined
+    here (2f+1) to keep conformance import-light."""
+    floor = 2 * int(n_byz) + 1
+    if n_used < floor:
+        return (f"request {req_idx}: vote consumed from {n_used} replies, "
+                f"below the {floor}-reply soundness floor (f={n_byz})")
+    return None
+
+
+def check_no_permanent_loss(req_idx: int, n_delivered: int, n_live: int,
+                            n: int, r: int) -> Optional[str]:
+    """Fleet-recovery liveness (DESIGN.md §16): as long as >= n-r
+    replicas are live at the end of the run, no request may be
+    *permanently* lost — detection must have re-fanned it out to live
+    replicas and at least one copy delivered. With fewer survivors the
+    promise is void (total outage is genuinely unservable)."""
+    if n_live < n - r:
+        return None               # degraded fleet: loss not promised away
+    if n_delivered == 0:
+        return (f"request {req_idx}: permanently lost with {n_live} live "
+                f"replicas (need only n-r={n - r} to guarantee delivery)")
+    return None
+
+
 def check_replica_agreement(streams, honest_ids, req_idx: int,
                             ) -> Optional[str]:
     """Honest replicas are deterministic copies of one greedy model, so

@@ -238,6 +238,23 @@ def _mark_crashed(eng, rid2copy, t: float) -> None:
             copy.status, copy.t_lost = LOST, t
 
 
+def step_and_bill(eng, j: int, t: float, transport,
+                  ecfg: E2EConfig) -> float:
+    """Run one superstep on replica j's engine and return its virtual-
+    time cost: one ``task_latency`` sample scaled by the fraction of a
+    round's token work the step actually did (DESIGN.md §15 billing).
+    Shared by the replica-serial harness below and the fleet-controlled
+    driver (:mod:`repro.sim.fleet_e2e`), so 'a superstep's cost' means
+    one thing in both."""
+    pre_dec = eng.stats["decode_steps"]
+    pre_pre = eng.stats["prefill_calls"]
+    eng.step()
+    work = (eng.stats["decode_steps"] - pre_dec
+            + ecfg.prefill_weight
+            * (eng.stats["prefill_calls"] - pre_pre))
+    return transport.task_latency(j, t, None) * work / ecfg.round_tokens
+
+
 def _run_replica(j: int, eng, arrivals, transport, faults: FaultSchedule,
                  ecfg: E2EConfig, t0: float = 0.0) -> float:
     """Drive replica j's engine through its arrival stream in virtual
@@ -258,14 +275,7 @@ def _run_replica(j: int, eng, arrivals, transport, faults: FaultSchedule,
             _mark_crashed(eng, rid2copy, t)
             t = faults.next_recovery(j, t)
             continue
-        pre_dec = eng.stats["decode_steps"]
-        pre_pre = eng.stats["prefill_calls"]
-        eng.step()
-        work = (eng.stats["decode_steps"] - pre_dec
-                + ecfg.prefill_weight
-                * (eng.stats["prefill_calls"] - pre_pre))
-        dt = (transport.task_latency(j, t, None)
-              * work / ecfg.round_tokens)
+        dt = step_and_bill(eng, j, t, transport, ecfg)
         t_end = t + dt
         crash = faults.first_crash_start(j, t, t_end)
         if crash is not None:

@@ -1,0 +1,147 @@
+"""Elastic checkpoint resharding (checkpoint/elastic.py, DESIGN.md §16).
+
+Dedicated edge-case suite beyond the smoke tests in test_checkpoint.py:
+shrink/grow round-trips, mean-vs-zero fill semantics, dtype
+preservation, the ``ledger_ts = -1`` joiner convention (a joiner is
+outside every T^t until it delivers), non-divisible global-batch
+rebatching, and the fleet-controller ``state_dict`` riding the same
+``agent_*`` path convention through a resize.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.elastic import (rebatch_global, reshard_agent_state,
+                                      resize_agent_axis)
+
+
+# ---------------------------------------------------------------------------
+# resize_agent_axis
+
+def test_shrink_then_grow_keeps_survivor_rows():
+    arr = np.arange(12, dtype=np.float32).reshape(4, 3)
+    small = resize_agent_axis(arr, 2)
+    np.testing.assert_array_equal(small, arr[:2])
+    back = resize_agent_axis(small, 4)
+    np.testing.assert_array_equal(back[:2], arr[:2])
+    np.testing.assert_array_equal(back[2:], 0.0)
+
+
+def test_same_n_is_identity():
+    arr = np.ones((3, 2))
+    assert resize_agent_axis(arr, 3) is arr
+
+
+def test_mean_fill_broadcasts_column_means():
+    arr = np.array([[1.0, 10.0], [3.0, 30.0]], np.float32)
+    big = resize_agent_axis(arr, 4, fill="mean")
+    np.testing.assert_allclose(big[2], [2.0, 20.0])
+    np.testing.assert_allclose(big[3], [2.0, 20.0])
+    assert big.dtype == np.float32
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32,
+                                   np.int8, np.bool_])
+def test_zero_fill_preserves_dtype(dtype):
+    arr = np.ones((2, 3), dtype)
+    assert resize_agent_axis(arr, 5).dtype == dtype
+    assert resize_agent_axis(arr, 1).dtype == dtype
+
+
+def test_grow_scalar_rows_and_high_rank():
+    vec = np.arange(3, dtype=np.int32)          # (n,) telemetry
+    assert resize_agent_axis(vec, 5).shape == (5,)
+    cube = np.ones((2, 3, 4, 5))                # (n, ...) deep leaf
+    assert resize_agent_axis(cube, 6).shape == (6, 3, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# reshard_agent_state
+
+def _flat(n=4, d=3):
+    rng = np.random.default_rng(0)
+    return {
+        "ledger/g": rng.normal(size=(n, d)),
+        "ledger_ts": np.arange(n, dtype=np.int64),
+        "err/residual": rng.normal(size=(n, d)),
+        "agent_mask": np.ones(n, bool),
+        "opt/momentum": rng.normal(size=(d,)),   # global: untouched
+        "step": np.asarray(17),
+    }
+
+
+def test_reshard_grow_joiner_semantics():
+    flat = _flat(4)
+    out = reshard_agent_state(flat, 6)
+    # joiners start from the aggregated mean gradient...
+    np.testing.assert_allclose(out["ledger/g"][4],
+                               flat["ledger/g"].mean(0))
+    # ...but timestamp -1 keeps them out of every T^t until they deliver
+    np.testing.assert_array_equal(out["ledger_ts"][4:], [-1, -1])
+    np.testing.assert_array_equal(out["ledger_ts"][:4], flat["ledger_ts"])
+    # error-feedback residuals start at zero (nothing was ever compressed)
+    np.testing.assert_array_equal(out["err/residual"][4:], 0.0)
+    assert out["agent_mask"].shape == (6,)
+    # global leaves pass through untouched, same object
+    assert out["opt/momentum"] is flat["opt/momentum"]
+    assert out["step"] is flat["step"]
+
+
+def test_reshard_shrink_truncates_every_agent_leaf():
+    flat = _flat(4)
+    out = reshard_agent_state(flat, 2)
+    for k in ("ledger/g", "ledger_ts", "err/residual", "agent_mask"):
+        assert out[k].shape[0] == 2
+        np.testing.assert_array_equal(out[k], flat[k][:2])
+
+
+def test_reshard_nested_ledger_ts_key():
+    flat = {"train/ledger_ts": np.array([3, 5], np.int64)}
+    out = reshard_agent_state(flat, 4)
+    np.testing.assert_array_equal(out["train/ledger_ts"], [3, 5, -1, -1])
+
+
+def test_reshard_roundtrip_identity_for_survivors():
+    flat = _flat(5)
+    back = reshard_agent_state(reshard_agent_state(flat, 8), 5)
+    for k in ("ledger/g", "ledger_ts", "err/residual", "agent_mask"):
+        np.testing.assert_array_equal(back[k], flat[k])
+
+
+# ---------------------------------------------------------------------------
+# rebatch_global
+
+def test_rebatch_non_divisible_grow_tiles_content():
+    batch = np.arange(3)
+    out = rebatch_global(batch, 7)
+    np.testing.assert_array_equal(out, [0, 1, 2, 0, 1, 2, 0])
+
+
+def test_rebatch_shrink_truncates():
+    batch = np.arange(7)
+    np.testing.assert_array_equal(rebatch_global(batch, 3), [0, 1, 2])
+
+
+def test_rebatch_identity_and_rank():
+    batch = np.ones((4, 2, 3))
+    assert rebatch_global(batch, 4) is batch
+    assert rebatch_global(batch, 10).shape == (10, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# fleet controller state rides the agent_* convention
+
+def test_fleet_controller_state_resizes_with_the_fleet():
+    from repro.serve.fleet import DEAD, HEALTHY, FleetConfig, FleetController
+    ctrl = FleetController(FleetConfig(n_replicas=4, window=8))
+    ctrl.observe(0, 1.0)
+    ctrl.observe(0, 2.0)
+    ctrl.note_latency(0, 0.5)
+    ctrl.state[3] = DEAD
+    grown = FleetController(FleetConfig(n_replicas=6, window=8))
+    grown.load_state(reshard_agent_state(ctrl.state_dict(), 6))
+    assert grown.state == ctrl.state + [HEALTHY, HEALTHY]
+    assert grown.ewma[0] == pytest.approx(ctrl.ewma[0])
+    assert grown.det[0].gaps == pytest.approx([1.0])
+    shrunk = FleetController(FleetConfig(n_replicas=3, window=8))
+    shrunk.load_state(reshard_agent_state(ctrl.state_dict(), 3))
+    assert shrunk.state == ctrl.state[:3]

@@ -1,0 +1,271 @@
+"""Fleet health & recovery control plane (DESIGN.md §16).
+
+Unit-level: phi-accrual detector math, the health state machine and its
+probation/rejoin bookkeeping, elastic ``state_dict`` resharding. System-
+level: ``HedgedDispatcher`` over a ``SimTransport`` — crash windows are
+detected from silence alone, hedges fill stalled quorums, total outages
+raise the typed ``NoQuorumError`` after bounded retries, Byzantine
+replicas never outvote a floor-respecting quorum, and low-SLA traffic is
+shed while the fleet is degraded.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.dispatch import NoQuorumError, honest_tokens
+from repro.serve.fleet import (DEAD, HEALTHY, RECOVERING, SUSPECT,
+                               FleetConfig, FleetController,
+                               HedgedDispatcher, PhiAccrualDetector,
+                               vote_floor)
+from repro.sim.faults import CrashWindow, FaultSchedule, SimTransport
+from repro.sim.scenario import Scenario
+
+
+def _transport(n=8, crashes=(), seed=3):
+    sc = Scenario(name="fleet_fixture", description="hedged dispatch",
+                  n_agents=n, seed=seed,
+                  faults=FaultSchedule(crashes=tuple(crashes)))
+    return sc.make_transport()
+
+
+def _requests(k, seed=0, length=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, length).astype(np.int32) for _ in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# detector
+
+def test_vote_floor_is_2f_plus_1():
+    assert [vote_floor(f) for f in range(4)] == [1, 3, 5, 7]
+
+
+def test_phi_cold_prior_then_window():
+    det = PhiAccrualDetector(window=4, min_samples=3, init_interval=2.0)
+    assert det.phi(10.0) == 0.0           # nothing ever observed
+    det.observe(0.0)
+    assert det.phi(0.0) == 0.0            # dt <= 0
+    # cold detector: prior N(2, 2) — slow to accuse
+    cold = det.phi(3.0)
+    # feed metronomic 1s gaps; the window takes over and suspicion at the
+    # same wall offset is now much sharper
+    for t in (1.0, 2.0, 3.0):
+        det.observe(t)
+    warm = det.phi(6.0)
+    assert warm > det.phi(4.0)            # monotone in silence
+    assert warm > cold
+    assert len(det.gaps) <= 4             # window trimmed
+
+
+def test_phi_needs_outstanding_expectation():
+    ctrl = FleetController(FleetConfig(n_replicas=2))
+    ctrl.observe(0, 1.0)
+    # no send since the last observation: silence is not evidence
+    assert ctrl.phi(0, 100.0) == 0.0
+    assert ctrl.poll(100.0) == []
+    ctrl.note_sent(0, 2.0)
+    assert ctrl.phi(0, 100.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# state machine
+
+def test_lifecycle_healthy_suspect_dead_recovering_rejoined():
+    cfg = FleetConfig(n_replicas=2, probation_replies=2)
+    ctrl = FleetController(cfg)
+    for t in range(4):                    # regular traffic from replica 0
+        ctrl.observe(0, float(t))
+        ctrl.note_sent(0, float(t) + 0.5)
+    ctrl.note_sent(0, 4.0)                # outstanding request, no reply
+    assert ctrl.poll(4.2) == []           # not silent long enough
+    fired = ctrl.poll(4.5)
+    assert [f.new for f in fired] == [SUSPECT]
+    fired = ctrl.poll(8.0)
+    assert [f.new for f in fired] == [DEAD]
+    assert ctrl.deaths == 1
+    assert not ctrl.countable(0)
+    assert ctrl.degraded()                # 1 countable < n - r = 2
+    # first sign of life: recovering, on probation, still not countable
+    ctrl.observe(0, 41.0)
+    assert ctrl.state[0] == RECOVERING
+    assert not ctrl.countable(0)
+    ctrl.observe(0, 42.0)
+    assert ctrl.state[0] == RECOVERING    # probation_replies=2
+    ctrl.observe(0, 43.0)
+    assert ctrl.state[0] == HEALTHY
+    assert ctrl.rejoins == 1
+    assert ctrl.countable(0) and not ctrl.degraded()
+    news = [tr.new for tr in ctrl.transitions if tr.replica == 0]
+    assert news == [SUSPECT, DEAD, RECOVERING, HEALTHY]
+
+
+def test_suspect_recovers_on_reply():
+    ctrl = FleetController(FleetConfig(n_replicas=1, r=0))
+    ctrl.observe(0, 0.0)
+    ctrl.note_sent(0, 1.0)
+    ctrl.poll(7.0)
+    assert ctrl.state[0] == SUSPECT
+    assert ctrl.countable(0)              # suspect still counts
+    ctrl.observe(0, 7.5)
+    assert ctrl.state[0] == HEALTHY
+
+
+def test_ranked_prefers_healthy_then_fast():
+    cfg = FleetConfig(n_replicas=3)
+    ctrl = FleetController(cfg)
+    ctrl.ewma = [3.0, 1.0, 2.0]
+    ctrl.state = [HEALTHY, SUSPECT, HEALTHY]
+    assert ctrl.ranked() == [2, 0, 1]
+
+
+def test_state_dict_roundtrip_and_elastic_reshard():
+    from repro.checkpoint.elastic import reshard_agent_state
+    cfg = FleetConfig(n_replicas=3, window=4)
+    ctrl = FleetController(cfg)
+    ctrl.observe(1, 1.0)
+    ctrl.observe(1, 2.5)
+    ctrl.note_sent(1, 3.0)
+    ctrl.note_latency(1, 0.7)
+    ctrl.state[2] = DEAD
+    flat = ctrl.state_dict()
+    twin = FleetController(cfg)
+    twin.load_state(flat)
+    assert twin.state == ctrl.state
+    assert twin.ewma == pytest.approx(ctrl.ewma)
+    assert twin.det[1].gaps == pytest.approx(ctrl.det[1].gaps)
+    assert twin.det[1].last == ctrl.det[1].last
+    assert twin.det[0].last is None
+    # grow the fleet: joiners come back healthy with cold detectors
+    big = FleetController(FleetConfig(n_replicas=5, window=4))
+    big.load_state(reshard_agent_state(flat, 5))
+    assert big.state[:3] == ctrl.state
+    assert big.state[3:] == [HEALTHY, HEALTHY]
+    assert big.ewma[3] == cfg.init_interval   # zero rows sanitized
+    assert big.det[4].gaps == []
+    assert big.phi(4, 100.0) == 0.0           # joiner carries no expectation
+    # shrink: survivors keep their record
+    small = FleetController(FleetConfig(n_replicas=2, window=4))
+    small.load_state(reshard_agent_state(flat, 2))
+    assert small.state == ctrl.state[:2]
+    with pytest.raises(ValueError):
+        small.load_state(flat)                # wrong n rejected
+
+
+def test_fleetconfig_validation():
+    with pytest.raises(ValueError):
+        FleetConfig(n_replicas=4, r=4)
+    with pytest.raises(ValueError):
+        # floor 2f+1 = 5 > n - r = 4: quorum can never be sound
+        FleetConfig(n_replicas=6, r=2, byz_ids=(0, 1))
+    assert FleetConfig(n_replicas=8, r=2, byz_ids=(0, 1)).floor == 5
+
+
+# ---------------------------------------------------------------------------
+# hedged dispatch over the fault-injecting transport
+
+def test_no_faults_serves_exact_tokens_deterministically():
+    cfg = FleetConfig(n_replicas=8, r=2, seed=5)
+    reqs = _requests(12, seed=1)
+
+    def run():
+        disp = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                                transport=_transport(8))
+        out, lats = [], []
+        for i, req in enumerate(reqs):
+            disp.now = max(disp.now, 2.0 * i)
+            res = disp.dispatch(req)
+            out.append(res.tokens)
+            lats.append(res.round_latency)
+        return disp, out, np.asarray(lats)
+
+    disp, out, lats = run()
+    for req, toks in zip(reqs, out):
+        np.testing.assert_array_equal(toks, honest_tokens(req))
+    assert disp.ctrl.deaths == 0 and disp.outages == 0
+    assert np.all(np.isfinite(lats))
+    _, out2, lats2 = run()               # same seed, fresh everything
+    np.testing.assert_array_equal(lats, lats2)
+    for a, b in zip(out, out2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_crash_window_detected_hedged_and_rejoined():
+    cfg = FleetConfig(n_replicas=8, r=2, seed=5)
+    disp = HedgedDispatcher(
+        lambda j, req: honest_tokens(req), cfg,
+        transport=_transport(8, crashes=(CrashWindow(0, 5.0, 60.0),
+                                         CrashWindow(1, 5.0, 60.0))))
+    reqs = _requests(40, seed=2)
+    for i, req in enumerate(reqs):
+        disp.now = max(disp.now, 2.5 * i)
+        res = disp.dispatch(req)
+        np.testing.assert_array_equal(res.tokens, honest_tokens(req))
+        assert res.quorum_honest
+    ctrl = disp.ctrl
+    assert ctrl.deaths == 2               # both crashed replicas accused
+    assert ctrl.rejoins == 2              # and re-admitted after probation
+    assert ctrl.state == [HEALTHY] * 8
+    assert disp.hedges >= 1               # stalled quorums got backups
+    assert disp.outages == 0
+    for j in (0, 1):
+        news = [t.new for t in ctrl.transitions if t.replica == j]
+        assert news == [SUSPECT, DEAD, RECOVERING, HEALTHY]
+
+
+def test_total_outage_raises_typed_after_backoff():
+    cfg = FleetConfig(n_replicas=3, r=0, seed=5, max_retries=2)
+    disp = HedgedDispatcher(
+        lambda j, req: honest_tokens(req), cfg,
+        transport=_transport(3, crashes=tuple(
+            CrashWindow(j, 0.0, 1e9) for j in range(3))))
+    with pytest.raises(NoQuorumError) as ei:
+        disp.dispatch(_requests(1)[0])
+    assert isinstance(ei.value, RuntimeError)   # legacy handlers still work
+    assert ei.value.rid == 0
+    assert ei.value.deliverable == 0
+    assert ei.value.wait == 3
+    assert disp.outages == 1
+    assert disp.retries == cfg.max_retries
+
+
+def test_byzantine_replicas_outvoted_above_floor():
+    cfg = FleetConfig(n_replicas=8, r=2, byz_ids=(0, 5),
+                      attack="sign_flip", seed=9)
+    assert cfg.floor == 5
+    disp = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                            transport=_transport(8, seed=9))
+    for i, req in enumerate(_requests(10, seed=3)):
+        disp.now = max(disp.now, 2.0 * i)
+        res = disp.dispatch(req)
+        assert res.quorum_honest
+        np.testing.assert_array_equal(res.tokens, honest_tokens(req))
+
+
+def test_degraded_fleet_sheds_low_priority_then_serves():
+    cfg = FleetConfig(n_replicas=4, r=1, seed=5, shed_below=1)
+    disp = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                            transport=_transport(4))
+    # the controller has already declared half the fleet dead
+    disp.ctrl.state[0] = DEAD
+    disp.ctrl.state[1] = DEAD
+    assert disp.ctrl.degraded()
+    reqs = _requests(6, seed=4)
+    results, lats = disp.serve(reqs, priorities=[0, 1, 0, 2, 0, 1])
+    assert disp.shed == 3                 # the three priority-0 requests
+    assert all(r is not None for r in results)   # parked but never dropped
+    for req, res in zip(reqs, results):
+        np.testing.assert_array_equal(res.tokens, honest_tokens(req))
+    assert np.all(np.isfinite(lats))
+
+
+def test_reseed_resets_everything():
+    cfg = FleetConfig(n_replicas=4, r=1, seed=5)
+    disp = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                            transport=_transport(4))
+    r0 = disp.dispatch(_requests(1)[0])
+    disp.ctrl.state[0] = DEAD
+    disp.reseed()
+    assert disp.now == 0.0 and disp._rid == 0
+    assert disp.ctrl.state == [HEALTHY] * 4
+    r1 = disp.dispatch(_requests(1)[0])
+    np.testing.assert_array_equal(r0.tokens, r1.tokens)
+    assert r0.round_latency == r1.round_latency

@@ -1,0 +1,146 @@
+"""Fleet recovery against real replicated engines (DESIGN.md §16).
+
+The chaos harness drives ``FleetController`` detection, deadline-hedged
+re-dispatch, and checkpoint-based rejoin over *real* ``ServeEngine``
+decode supersteps. These tests pin the contract at both layers:
+
+- engine level: ``snapshot()`` is idle-only, ``restart(image)`` rebuilds
+  the data plane from a checkpoint image with a monotone rid counter and
+  byte-identical greedy streams;
+- harness level: scripted crash windows are detected from silence, every
+  crashed replica rejoins through probation, no request is permanently
+  lost while >= n-r replicas survive, the Byzantine vote floor holds
+  through churn, and a replay on a reused fleet is deterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.sim.e2e import EngineFleet
+from repro.sim.faults import CrashWindow, FaultSchedule
+from repro.sim.fleet_e2e import run_fleet_e2e
+from repro.sim.scenario import Scenario
+
+
+def tiny(name, **kw):
+    kw.setdefault("n_agents", 4)
+    kw.setdefault("r", 1)
+    kw.setdefault("iters", 30)
+    kw.setdefault("seed", 7)
+    kw.setdefault("n_requests", 6)
+    return Scenario(name=name, description="fleet recovery fixture", **kw)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """One shared 4-replica fleet; every test must leave it drained."""
+    return EngineFleet(4)
+
+
+@pytest.fixture(autouse=True)
+def _drained(fleet):
+    yield
+    assert fleet.drained(), "test leaked in-flight requests into the fleet"
+
+
+def _prompt(seed, n=8):
+    return np.random.default_rng(seed).integers(0, 256, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine level: checkpoint image + process restart
+
+def test_snapshot_requires_drained_engine(fleet):
+    eng = fleet.engines[0]
+    rid = eng.submit(_prompt(50), 8)
+    with pytest.raises(RuntimeError, match="drained"):
+        eng.snapshot()
+    eng.run()
+    assert rid in eng.sched.finished
+    image = eng.snapshot()               # drained: now allowed
+    assert int(image["next_rid"]) == eng._next_rid
+    assert any(k.startswith("kv/") for k in image)
+
+
+def test_restart_from_image_monotone_rids_same_stream(fleet):
+    eng = fleet.engines[1]
+    rid0 = eng.submit(_prompt(51), 8)
+    out0 = eng.run()[rid0]
+    image = eng.snapshot()
+    restarts0 = eng.stats.get("restarts", 0)
+    # dirty the engine, then crash it — the image is the rejoin state
+    eng.submit(_prompt(52), 8)
+    eng.step()
+    eng.crash()
+    eng.restart(image)
+    assert eng.stats["restarts"] == restarts0 + 1
+    assert eng.sched.idle
+    rid1 = eng.submit(_prompt(51), 8)
+    assert rid1 > rid0                   # rid counter survived the restart
+    out1 = eng.run()[rid1]
+    np.testing.assert_array_equal(out0, out1)
+
+
+def test_cold_restart_without_image(fleet):
+    eng = fleet.engines[2]
+    rid0 = eng.submit(_prompt(53), 8)
+    out0 = eng.run()[rid0]
+    eng.restart()                        # fresh process, no checkpoint
+    rid1 = eng.submit(_prompt(53), 8)
+    out1 = eng.run()[rid1]
+    np.testing.assert_array_equal(out0, out1)
+
+
+# ---------------------------------------------------------------------------
+# harness level: detection, rejoin, zero permanent loss
+
+def test_crash_windows_detected_rejoined_zero_loss(fleet):
+    sc = tiny("fleet_crash_rejoin",
+              faults=FaultSchedule(crashes=(CrashWindow(0, 6.0, 18.0),
+                                            CrashWindow(1, 10.0, 24.0))))
+    rep = run_fleet_e2e(sc, fleet=fleet)
+    m = rep.metrics
+    assert rep.violations == []
+    assert m.permanently_lost == 0
+    assert m.deaths == 2                 # exactly the scripted outages
+    assert m.rejoins == 2
+    assert m.restarts == 2               # checkpoint-based rejoin ran
+    assert m.recovery_time_mean > 0
+    assert m.recovery_time_max >= m.recovery_time_mean
+    assert rep.native.n_unanswered == 0
+    for req in rep.requests:
+        assert len(req.delivered()) >= 1
+
+
+def test_no_faults_full_goodput_no_transitions(fleet):
+    sc = tiny("fleet_clean")
+    rep = run_fleet_e2e(sc, fleet=fleet)
+    m = rep.metrics
+    assert rep.violations == []
+    assert m.deaths == 0 and m.rejoins == 0 and m.restarts == 0
+    assert m.permanently_lost == 0
+    assert rep.native.n_ok == sc.n_requests
+    assert m.recovered == 1.0            # nothing to recover from
+    assert np.isfinite(rep.native.p99_latency)
+
+
+def test_byzantine_vote_floor_holds_through_churn(fleet):
+    sc = tiny("fleet_byz_churn", byz_ids=(0,), attack="sign_flip",
+              faults=FaultSchedule(crashes=(CrashWindow(1, 5.0, 16.0),)))
+    rep = run_fleet_e2e(sc, fleet=fleet)
+    assert rep.violations == []          # includes the 2f+1 floor check
+    assert rep.metrics.permanently_lost == 0
+    assert rep.metrics.deaths == 1 and rep.metrics.rejoins == 1
+
+
+def test_replay_on_reused_fleet_is_deterministic(fleet):
+    sc = tiny("fleet_replay",
+              faults=FaultSchedule(crashes=(CrashWindow(2, 5.0, 15.0),)))
+    rep1 = run_fleet_e2e(sc, fleet=fleet)
+    rep2 = run_fleet_e2e(sc, fleet=fleet)
+    assert rep1.native == rep2.native
+    for f in ("deaths", "rejoins", "restarts", "hedges", "retries",
+              "shed", "permanently_lost", "transitions"):
+        assert getattr(rep1.metrics, f) == getattr(rep2.metrics, f)
+    d1 = [(r.idx, [c.replica for c in r.delivered()]) for r in rep1.requests]
+    d2 = [(r.idx, [c.replica for c in r.delivered()]) for r in rep2.requests]
+    assert d1 == d2

@@ -115,3 +115,56 @@ def test_dispatch_uses_exactly_n_minus_r():
                             latency=default_latency(N, 2, 6.0, seed=1))
     res = d.dispatch(_requests(1)[0])
     assert len(calls) == N - 3 == res.n_received == len(res.used)
+
+
+# ---------------------------------------------------------------------------
+# vectorized majority vote: exact parity with the per-column reference
+
+def _vote_reference(streams):
+    """The pre-vectorization per-column np.unique loop, kept as the
+    semantic spec: mode per position, ties broken toward the smallest
+    value (np.unique returns sorted values, argmax picks the first)."""
+    s = np.asarray(streams)
+    out = np.empty(s.shape[1], s.dtype)
+    for i in range(s.shape[1]):
+        vals, counts = np.unique(s[:, i], return_counts=True)
+        out[i] = vals[np.argmax(counts)]
+    return out
+
+
+def test_majority_vote_matches_reference_exactly():
+    from repro.serve.dispatch import majority_vote
+    rng = np.random.default_rng(11)
+    for m in (1, 2, 3, 4, 5, 8):
+        for vocab in (2, 3, 257):        # tiny vocab forces heavy ties
+            s = rng.integers(0, vocab, (m, 33)).astype(np.int32)
+            np.testing.assert_array_equal(majority_vote(s),
+                                          _vote_reference(s))
+    # crafted ties: every column split 1-1 -> smallest value must win
+    s = np.array([[2, 1, 7], [1, 2, 3]], np.int64)
+    np.testing.assert_array_equal(majority_vote(s), [1, 1, 3])
+    np.testing.assert_array_equal(majority_vote(s), _vote_reference(s))
+    # empty stream and dtype preservation
+    empty = np.empty((3, 0), np.int16)
+    assert majority_vote(empty).shape == (0,)
+    assert majority_vote(empty).dtype == np.int16
+    assert majority_vote(s).dtype == np.int64
+
+
+def test_no_quorum_error_is_typed_and_backward_compatible():
+    from repro.serve.dispatch import NoQuorumError
+    cfg = DispatchConfig(n_replicas=3, r=1)
+    transport = SimTransport(
+        3, FaultSchedule(crashes=tuple(
+            CrashWindow(agent=k, start=0.0, end=1e9) for k in range(3))),
+        LatencyModel(n_agents=3), seed=5)
+    d = RedundantDispatcher(_replica_fn, cfg, transport=transport)
+    with pytest.raises(NoQuorumError) as ei:
+        d.dispatch(_requests(1)[0])
+    assert isinstance(ei.value, RuntimeError)    # legacy handlers survive
+    assert ei.value.rid == 0
+    assert ei.value.deliverable == 0
+    assert ei.value.wait == 2                    # n - r
+    with pytest.raises(NoQuorumError) as ei2:
+        d.dispatch(_requests(1)[0])
+    assert ei2.value.rid == 1                    # counter advances per request
