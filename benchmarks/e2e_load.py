@@ -23,6 +23,12 @@ controller (``repro.sim.fleet_e2e``: phi-accrual detection, hedged
 re-dispatch, checkpoint-based rejoin) and gates crash_cascade /
 rolling_restart on post-rejoin recovery and zero permanent loss.
 
+``--wallclock`` runs the realtime chaos presets (``repro.sim.
+realtime_chaos``) on REAL threads and timers: RealClock + EngineReplica
+wrappers around the shared engines at a compressed timescale. Rows
+record recovery time, goodput under churn, and the hedge-fire rate —
+the wall-clock counterparts of the ``--fleet`` virtual-time rows.
+
 ``--record`` writes BENCH_e2e.json; under ``--smoke`` it writes
 BENCH_e2e.smoke.json instead so a reduced sweep never clobbers the
 committed full baseline.
@@ -54,6 +60,15 @@ FLEET_SCENARIOS = ("crash_cascade", "rolling_restart", "partition_heal",
 FLEET_RECOVERY_GATED = ("crash_cascade", "rolling_restart")
 FLEET_RECOVERED_MIN = 0.9
 FLEET_SMOKE_REQUESTS = 16
+
+# realtime chaos presets replayed on real threads + timers (RealClock +
+# EngineReplica, repro.sim.realtime_chaos); the timescale adapts to one
+# measured engine-request latency so plan proportions match the stubs'
+WALLCLOCK_PLANS = ("kill_rejoin", "pause_blip", "straggler",
+                   "crash_cascade")
+WALLCLOCK_N = 4
+WALLCLOCK_SMOKE_REQUESTS = 12
+WALLCLOCK_STUB_WORK = 0.3     # StubReplica work_time at scale 1.0
 
 
 def run_scenarios(names=None, n_requests=None, fleet=None, log=print):
@@ -118,6 +133,77 @@ def run_fleet_scenarios(names=None, n_requests=None, fleet=None, log=print):
     return rows, fleet
 
 
+def run_wallclock(plans=None, fleet=None, n_requests=None, log=print):
+    import dataclasses
+
+    import numpy as np
+
+    from repro.serve.fleet import FleetConfig
+    from repro.serve.realtime import EngineReplica, RealClock
+    from repro.sim.e2e import E2EConfig, EngineFleet
+    from repro.sim.realtime_chaos import PLANS, run_realtime_chaos
+
+    plans = list(plans) if plans else list(WALLCLOCK_PLANS)
+    ecfg = E2EConfig()
+    if fleet is None or fleet.n < WALLCLOCK_N:
+        fleet = EngineFleet(WALLCLOCK_N)
+    replicas = [EngineReplica(e, ecfg.max_new_tokens)
+                for e in fleet.engines[:WALLCLOCK_N]]
+    # warm every engine (jit paid here), then time one request per
+    # replica to pick the timescale: plans keep their stub-time
+    # proportions, so heartbeat/arrival/fault spacing stays meaningful
+    # whatever the hardware
+    req = np.arange(1, 9, dtype=np.int32)
+    for rep in replicas:
+        rep.process(req, lambda: False)
+    t0 = time.time()
+    for rep in replicas:
+        rep.process(req, lambda: False)
+    lat = (time.time() - t0) / len(replicas)
+    scale = max(lat, 1e-3) / WALLCLOCK_STUB_WORK
+    rows = []
+    for name in plans:
+        plan = PLANS[name](WALLCLOCK_N, scale=scale)
+        if n_requests is not None and n_requests < plan.n_requests:
+            log(f"# wallclock/{name}: truncated to {n_requests}/"
+                f"{plan.n_requests} requests (smoke)")
+            plan = dataclasses.replace(plan, n_requests=n_requests)
+        cfg = FleetConfig(n_replicas=WALLCLOCK_N, r=1, seed=0,
+                          heartbeat_period=2.0 * scale)
+        t0 = time.time()
+        rep = run_realtime_chaos(plan, cfg, clock=RealClock(),
+                                 replicas=replicas)
+        rows.append(dict(wall_s=time.time() - t0, scale=scale,
+                         **rep.as_dict()))
+    return rows, fleet
+
+
+def check_wallclock_rows(rows, smoke: bool) -> list:
+    """§17 gates on real timers, outcomes only: zero permanent loss,
+    conformance clean, every kill answered by a restart + rejoin. The
+    recovery ratio is reported but not gated — wall-clock goodput on a
+    shared CI box is informative, not reproducible."""
+    problems = []
+    for row in rows:
+        name = row["plan"]
+        if row["violations"]:
+            problems.append(f"wallclock/{name}: "
+                            f"{len(row['violations'])} violations: "
+                            f"{row['violations'][:3]}")
+        if row["lost"]:
+            problems.append(f"wallclock/{name}: {row['lost']} requests "
+                            f"permanently lost")
+        if not row["drained"]:
+            problems.append(f"wallclock/{name}: shutdown did not drain")
+        if not smoke and name in ("kill_rejoin", "crash_cascade"):
+            if not (row["deaths"] >= 1 and row["rejoins"] >= 1):
+                problems.append(f"wallclock/{name}: kill never detected "
+                                f"or never rejoined "
+                                f"(deaths={row['deaths']}, "
+                                f"rejoins={row['rejoins']})")
+    return problems
+
+
 def check_fleet_rows(rows, smoke: bool) -> list:
     """§16 acceptance gates: conformance clean (no permanent loss with
     >= n-r survivors, no vote below the 2f+1 floor), and on full runs
@@ -167,8 +253,22 @@ def check_rows(rows) -> list:
     return problems
 
 
+def _fmt_wallclock(row) -> str:
+    return (f"wallclock/{row['plan']},{row['wall_s'] * 1e6:.0f},"
+            f"scale={row['scale']:.3f};deaths={row['deaths']};"
+            f"rejoins={row['rejoins']};restarts={row['restarts']};"
+            f"hedge_rate={row['hedge_rate']:.3f};"
+            f"retries={row['retries']};lost={row['lost']};"
+            f"rec_t={row['recovery_time_mean']:.2f}/"
+            f"{row['recovery_time_max']:.2f};"
+            f"recovered={row['recovered']:.3f};"
+            f"goodput={row['goodput_pre']:.3f}->{row['goodput_post']:.3f};"
+            f"ok={row['delivered']}/{row['delivered'] + row['lost']};"
+            f"viol={len(row['violations'])}")
+
+
 def record(rows, dispatch_rows, smoke: bool,
-           fleet_rows=None) -> pathlib.Path:
+           fleet_rows=None, wallclock_rows=None) -> pathlib.Path:
     import jax
     from repro.sim.e2e import E2EConfig
     ecfg = E2EConfig()
@@ -194,6 +294,9 @@ def record(rows, dispatch_rows, smoke: bool,
     if fleet_rows is not None:
         payload["fleet"] = [{**r, "violations": len(r["violations"])}
                             for r in fleet_rows]
+    if wallclock_rows is not None:
+        payload["wallclock"] = [{**r, "violations": len(r["violations"])}
+                                for r in wallclock_rows]
     path = BENCH_PATH.with_suffix(".smoke.json") if smoke else BENCH_PATH
     path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
     print(f"wrote {path}")
@@ -227,19 +330,22 @@ def _fmt_fleet(row) -> str:
 
 
 def main(smoke: bool = False, do_record: bool = False, names=None,
-         fleet_mode: bool = False):
+         fleet_mode: bool = False, wallclock_mode: bool = False,
+         wallclock_only: bool = False):
     try:                  # package import (benchmarks/run.py harness) …
         from benchmarks.serve_latency import run_dispatch
     except ImportError:   # … or standalone `python benchmarks/e2e_load.py`
         from serve_latency import run_dispatch
     from repro.sim.scenario import SCENARIOS
-    n_req = SMOKE_REQUESTS if smoke else None
-    rows, fleet = run_scenarios(names=names, n_requests=n_req)
-    for row in rows:
-        print(_fmt(row), flush=True)
-    problems = check_rows(rows)
+    problems, rows, fleet = [], [], None
+    if not wallclock_only:
+        n_req = SMOKE_REQUESTS if smoke else None
+        rows, fleet = run_scenarios(names=names, n_requests=n_req)
+        for row in rows:
+            print(_fmt(row), flush=True)
+        problems = check_rows(rows)
     fleet_rows = None
-    if fleet_mode:
+    if fleet_mode and not wallclock_only:
         fnames = [n for n in (names or FLEET_SCENARIOS)
                   if n in FLEET_SCENARIOS]
         if fnames:
@@ -249,11 +355,21 @@ def main(smoke: bool = False, do_record: bool = False, names=None,
             for row in fleet_rows:
                 print(_fmt_fleet(row), flush=True)
             problems += check_fleet_rows(fleet_rows, smoke)
-    if do_record:
+    wallclock_rows = None
+    if wallclock_mode or wallclock_only:
+        wallclock_rows, fleet = run_wallclock(
+            fleet=fleet,
+            n_requests=WALLCLOCK_SMOKE_REQUESTS if smoke else None)
+        for row in wallclock_rows:
+            print(_fmt_wallclock(row), flush=True)
+        problems += check_wallclock_rows(wallclock_rows, smoke)
+    if do_record and not wallclock_only:
         dispatch_rows = run_dispatch(200 if smoke else 2000,
                                      n_replicas=fleet.n)
-        record(rows, dispatch_rows, smoke, fleet_rows=fleet_rows)
-    if names is None and set(SCENARIOS) - {r["scenario"] for r in rows}:
+        record(rows, dispatch_rows, smoke, fleet_rows=fleet_rows,
+               wallclock_rows=wallclock_rows)
+    if not wallclock_only and names is None and \
+            set(SCENARIOS) - {r["scenario"] for r in rows}:
         problems.append("not every registered scenario was replayed")
     assert not problems, "; ".join(problems)
 
@@ -273,6 +389,15 @@ if __name__ == "__main__":
                          "the fleet controller (detection + hedged "
                          "re-dispatch + checkpoint rejoin) and gate on "
                          "recovery metrics")
+    ap.add_argument("--wallclock", action="store_true",
+                    help="additionally run the realtime chaos presets on "
+                         "real threads + timers (RealClock + "
+                         "EngineReplica) and report recovery time, "
+                         "goodput under churn, hedge-fire rate")
+    ap.add_argument("--wallclock-only", action="store_true",
+                    help="run only the wallclock presets (CI stage 12 "
+                         "smoke)")
     args = ap.parse_args()
     main(smoke=args.smoke, do_record=args.record, names=args.scenario,
-         fleet_mode=args.fleet)
+         fleet_mode=args.fleet, wallclock_mode=args.wallclock,
+         wallclock_only=args.wallclock_only)

@@ -37,6 +37,13 @@
 #          then every named scenario replayed against a real replicated
 #          fleet (--smoke --record writes BENCH_e2e.smoke.json, never
 #          the committed BENCH_e2e.json baseline).
+# Stage 11: fleet health & recovery (DESIGN.md §16) — detector/hedging/
+#          rejoin suites plus the fleet-controller chaos smoke on the
+#          crash_cascade and rolling_restart scenarios.
+# Stage 12: wall-clock fleet (DESIGN.md §17) — the realtime suite under
+#          FakeClock (deterministic threads, no real sleeps), the phi
+#          property fuzz, then a real-timer pass (wallclock marker +
+#          the --wallclock-only benchmark smoke) under hard timeouts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -97,5 +104,17 @@ JAX_PLATFORMS=cpu python -m pytest -q tests/test_fleet.py \
     tests/test_fleet_e2e.py tests/test_elastic.py
 JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/e2e_load.py \
     --smoke --fleet --scenario crash_cascade --scenario rolling_restart
+
+echo "== stage 12: wall-clock fleet (fake-clock suite + real-timer smoke) =="
+# deterministic threaded suite under FakeClock (no real sleeps), plus the
+# phi-accrual property fuzz
+JAX_PLATFORMS=cpu python -m pytest -q tests/test_realtime.py \
+    tests/test_realtime_chaos.py tests/test_property_fleet.py
+# one short real-clock pass: actual threads, actual timers, hard timeout
+# so a liveness bug can hang a worker but never the CI job
+RUN_WALLCLOCK=1 JAX_PLATFORMS=cpu timeout 300 python -m pytest -q \
+    -m wallclock tests/test_realtime_chaos.py
+JAX_PLATFORMS=cpu PYTHONPATH=src timeout 600 python benchmarks/e2e_load.py \
+    --smoke --wallclock-only
 
 echo "CI OK"

@@ -21,23 +21,34 @@ Layers (DESIGN.md §9, §13):
                 machine, deadline-hedged dispatch with elastic quorum
                 degrade to the vote floor, and checkpoint-based rejoin
                 with catch-up probation.
+- ``realtime``  wall-clock fleet frontend (DESIGN.md §17): the §16
+                control plane on real threads and timers behind the
+                Clock seam (RealClock for production, FakeClock for
+                deterministic threaded tests).
 """
 from repro.serve.kv_cache import (PageAllocator, PagedCacheConfig,
                                   PagedKVCache, SwapState, pages_needed)
 from repro.serve.prefix import PrefixIndex, PrefixPlan, chunk_hashes
 from repro.serve.scheduler import Request, RequestState, Scheduler
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, SnapshotInFlightError
 from repro.serve.dispatch import (DispatchConfig, DispatchResult,
                                   NoQuorumError, RedundantDispatcher)
 from repro.serve.fleet import (FleetConfig, FleetController,
                                HedgedDispatcher, PhiAccrualDetector,
+                               jitter_stream, next_frontend_instance,
                                vote_floor)
+from repro.serve.realtime import (Clock, EngineReplica, FakeClock,
+                                  RealClock, RealtimeFleet, ReplicaKilled,
+                                  StubReplica, Ticket)
 
 __all__ = [
     "PageAllocator", "PagedCacheConfig", "PagedKVCache", "SwapState",
     "pages_needed", "PrefixIndex", "PrefixPlan", "chunk_hashes",
     "Request", "RequestState", "Scheduler", "ServeEngine",
-    "DispatchConfig", "DispatchResult", "NoQuorumError",
-    "RedundantDispatcher", "FleetConfig", "FleetController",
-    "HedgedDispatcher", "PhiAccrualDetector", "vote_floor",
+    "SnapshotInFlightError", "DispatchConfig", "DispatchResult",
+    "NoQuorumError", "RedundantDispatcher", "FleetConfig",
+    "FleetController", "HedgedDispatcher", "PhiAccrualDetector",
+    "jitter_stream", "next_frontend_instance", "vote_floor",
+    "Clock", "EngineReplica", "FakeClock", "RealClock", "RealtimeFleet",
+    "ReplicaKilled", "StubReplica", "Ticket",
 ]

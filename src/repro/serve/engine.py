@@ -49,6 +49,30 @@ from repro.serve.kv_cache import (PagedCacheConfig, PagedKVCache,
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
 
+class SnapshotInFlightError(RuntimeError):
+    """``ServeEngine.snapshot()`` called while requests are in flight.
+
+    The snapshot contract is idle-only (DESIGN.md §16): an image taken
+    mid-decode would capture KV pools whose pages belong to requests the
+    scheduler still owns — restoring it would resurrect half-decoded
+    state the fleet already requeued elsewhere. The wall-clock rejoin
+    path hits this race for real (a supervisor restarting a replica the
+    moment the monitor declares it dead, while a straggling copy still
+    decodes), so the guard is typed: callers drain or ``crash()`` first,
+    and nothing about the engine is mutated by the refused call.
+    Subclasses RuntimeError so pre-existing handlers keep working.
+
+    Attributes: ``n_active`` / ``n_waiting`` — the in-flight population
+    that made the snapshot unsafe."""
+
+    def __init__(self, n_active: int, n_waiting: int):
+        super().__init__(
+            f"snapshot requires a drained engine ({n_active} active, "
+            f"{n_waiting} waiting) — crash() or drain first")
+        self.n_active = int(n_active)
+        self.n_waiting = int(n_waiting)
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig,
                  ccfg: Optional[PagedCacheConfig] = None,
@@ -434,8 +458,8 @@ class ServeEngine:
         controller requeues; DESIGN.md §16), so the image is exactly
         what a restarted process can honestly restore."""
         if not self.sched.idle:
-            raise RuntimeError("snapshot requires a drained engine — "
-                               "crash() or drain first")
+            raise SnapshotInFlightError(len(self.sched.active),
+                                        len(self.sched.waiting))
         flat: Dict[str, np.ndarray] = {
             "page_table": self.kv.page_table.copy(),
             "kv_lens": self.kv.kv_lens.copy(),

@@ -61,6 +61,33 @@ STATE_CODES = {HEALTHY: 0, SUSPECT: 1, RECOVERING: 2, DEAD: 3}
 CODE_STATES = {v: k for k, v in STATE_CODES.items()}
 
 
+_JITTER_SALT = 0x6a17             # rng key lane: backoff jitter, nothing else
+_FRONTEND_COUNTER = itertools.count()
+
+
+def next_frontend_instance() -> int:
+    """Process-unique frontend index. Two dispatchers/fleets built from
+    the same :class:`FleetConfig` get distinct instance keys and hence
+    **independent** backoff-jitter streams (two frontends sharing a seed
+    must not hedge in lockstep), while each instance's stream is still a
+    pure function of ``(seed, instance)`` — ``reseed()`` replays it."""
+    return next(_FRONTEND_COUNTER)
+
+
+def jitter_stream(seed: int, instance: int,
+                  rid: Optional[int] = None) -> np.random.Generator:
+    """The backoff-jitter generator for one frontend (optionally one
+    request). Keyed off the *seed sequence* ``[seed, salt, instance(,
+    rid)]`` so it is independent of the transport/latency stream
+    ``default_rng(seed)`` — drawing jitter can never perturb the
+    simulated arrival process, which is what keeps the no-fault golden
+    paths bit-identical across frontends."""
+    key = [int(seed), _JITTER_SALT, int(instance)]
+    if rid is not None:
+        key.append(int(rid))
+    return np.random.default_rng(key)
+
+
 def vote_floor(n_byz: int) -> int:
     """Minimum reply count at which the majority vote is sound no matter
     which replicas made the quorum: with ``f`` Byzantine replicas the
@@ -344,13 +371,25 @@ class HedgedDispatcher:
     def __init__(self, replica_fn: Callable[[int, np.ndarray], np.ndarray],
                  cfg: FleetConfig,
                  transport: Optional[Transport] = None,
-                 controller: Optional[FleetController] = None):
+                 controller: Optional[FleetController] = None,
+                 jitter_instance: Optional[int] = None):
         self.replica_fn = replica_fn
         self.cfg = cfg
         self.transport = transport or DefaultTransport(
             default_latency(cfg.n_replicas))
         self.ctrl = controller or FleetController(cfg)
+        # two rng streams with distinct lifecycles: ``rng`` replays the
+        # simulated world (transport latencies, delivery fates, Byzantine
+        # corruption) and is a pure function of the seed so two
+        # dispatchers replay the *same* world; ``_jrng`` draws backoff
+        # jitter only and is additionally keyed by a per-instance index
+        # so co-seeded frontends never back off in lockstep. reseed()
+        # replays both (the instance key is part of this object).
         self.rng = np.random.default_rng(cfg.seed)
+        self._jitter_instance = (next_frontend_instance()
+                                 if jitter_instance is None
+                                 else int(jitter_instance))
+        self._jrng = jitter_stream(cfg.seed, self._jitter_instance)
         self.now = 0.0
         self._rid = 0
         # telemetry
@@ -380,7 +419,7 @@ class HedgedDispatcher:
                 self.retries += 1
                 pause = min(c.backoff_base * (2.0 ** attempt),
                             c.backoff_cap)
-                pause *= 1.0 + c.backoff_jitter * float(self.rng.random())
+                pause *= 1.0 + c.backoff_jitter * float(self._jrng.random())
                 self.now += pause
                 self.ctrl.poll(self.now)
         self.outages += 1
@@ -513,6 +552,7 @@ class HedgedDispatcher:
 
     def reseed(self) -> None:
         self.rng = np.random.default_rng(self.cfg.seed)
+        self._jrng = jitter_stream(self.cfg.seed, self._jitter_instance)
         self.now = 0.0
         self._rid = 0
         self.hedges = self.retries = self.outages = self.shed = 0

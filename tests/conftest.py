@@ -1,9 +1,24 @@
 """Test bootstrap: register the in-tree hypothesis stub when the real
 package is absent (the container bakes no hypothesis and installing is
-not allowed — see tests/helpers/hypothesis_stub.py)."""
+not allowed — see tests/helpers/hypothesis_stub.py), and gate the
+``wallclock`` marker (real-timer tests are only trustworthy on a box
+that isn't thrashing — scripts/ci.sh stage 12 opts in via
+``RUN_WALLCLOCK=1`` under a hard timeout)."""
 import importlib.util
 import os
 import sys
+
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("RUN_WALLCLOCK"):
+        return
+    skip = pytest.mark.skip(
+        reason="real-timer test: set RUN_WALLCLOCK=1 (scripts/ci.sh stage 12)")
+    for item in items:
+        if "wallclock" in item.keywords:
+            item.add_marker(skip)
 
 
 def _install_hypothesis_stub() -> None:

@@ -15,7 +15,7 @@ from repro.serve.dispatch import NoQuorumError, honest_tokens
 from repro.serve.fleet import (DEAD, HEALTHY, RECOVERING, SUSPECT,
                                FleetConfig, FleetController,
                                HedgedDispatcher, PhiAccrualDetector,
-                               vote_floor)
+                               jitter_stream, vote_floor)
 from repro.sim.faults import CrashWindow, FaultSchedule, SimTransport
 from repro.sim.scenario import Scenario
 
@@ -269,3 +269,52 @@ def test_reseed_resets_everything():
     r1 = disp.dispatch(_requests(1)[0])
     np.testing.assert_array_equal(r0.tokens, r1.tokens)
     assert r0.round_latency == r1.round_latency
+
+
+# ---------------------------------------------------------------------------
+# jitter rng lifecycle: per-frontend streams, reproducible per instance
+
+def test_two_frontends_same_config_draw_independent_jitter():
+    """Two dispatchers built from the same FleetConfig must not share a
+    backoff-jitter stream (synchronized retry storms), yet each stream
+    is a pure function of (seed, instance) so a run stays replayable."""
+    cfg = FleetConfig(n_replicas=4, r=1, seed=7)
+    d0 = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                          transport=_transport(4))
+    d1 = HedgedDispatcher(lambda j, req: honest_tokens(req), cfg,
+                          transport=_transport(4))
+    assert d0._jitter_instance != d1._jitter_instance
+    s0 = [float(d0._jrng.random()) for _ in range(8)]
+    s1 = [float(d1._jrng.random()) for _ in range(8)]
+    assert s0 != s1
+    fresh = jitter_stream(cfg.seed, d0._jitter_instance)
+    assert [float(fresh.random()) for _ in range(8)] == s0
+
+
+def test_backoff_jitter_independent_across_frontends_reproducible():
+    """With a total outage forcing retries, the two frontends' jittered
+    backoff timings diverge, while re-running (or reseed()-ing) one
+    instance reproduces its latency bit-exactly."""
+    cfg = FleetConfig(n_replicas=4, r=1, seed=7)
+    crashes = tuple(CrashWindow(j, 5.0, 12.0) for j in range(4))
+    req = _requests(1, seed=3)[0]
+
+    def run(instance):
+        disp = HedgedDispatcher(lambda j, rq: honest_tokens(rq), cfg,
+                                transport=_transport(4, crashes=crashes),
+                                jitter_instance=instance)
+        disp.now = 6.0
+        res = disp.dispatch(req)
+        return disp, res, disp.now           # now includes jittered pauses
+
+    d0, r0, t0 = run(0)
+    d1, r1, t1 = run(1)
+    assert d0.retries > 0                    # backoff actually fired
+    np.testing.assert_array_equal(r0.tokens, r1.tokens)
+    assert t0 != t1                          # independent jitter streams
+    _, r0b, t0b = run(0)                     # fresh frontend, same instance
+    assert t0b == t0 and r0b.round_latency == r0.round_latency
+    d0.reseed()                              # reseed rewinds the stream too
+    d0.now = 6.0
+    r0c = d0.dispatch(req)
+    assert d0.now == t0 and r0c.round_latency == r0.round_latency

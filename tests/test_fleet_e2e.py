@@ -15,6 +15,7 @@ decode supersteps. These tests pin the contract at both layers:
 import numpy as np
 import pytest
 
+from repro.serve.engine import SnapshotInFlightError
 from repro.sim.e2e import EngineFleet
 from repro.sim.faults import CrashWindow, FaultSchedule
 from repro.sim.fleet_e2e import run_fleet_e2e
@@ -52,8 +53,14 @@ def _prompt(seed, n=8):
 def test_snapshot_requires_drained_engine(fleet):
     eng = fleet.engines[0]
     rid = eng.submit(_prompt(50), 8)
-    with pytest.raises(RuntimeError, match="drained"):
+    # the guard is typed (still a RuntimeError for pre-existing handlers)
+    # and reports the in-flight population that made the snapshot unsafe
+    with pytest.raises(SnapshotInFlightError, match="drained") as ei:
         eng.snapshot()
+    assert isinstance(ei.value, RuntimeError)
+    assert ei.value.n_active + ei.value.n_waiting >= 1
+    # nothing was mutated by the refused call: the engine still drains
+    # and serves the in-flight request normally
     eng.run()
     assert rid in eng.sched.finished
     image = eng.snapshot()               # drained: now allowed

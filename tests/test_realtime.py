@@ -1,0 +1,267 @@
+"""Wall-clock fleet frontend under the fake clock (DESIGN.md §17).
+
+Every test here drives the PRODUCTION RealtimeFleet code — real worker
+threads, real condition-variable waits — with virtual time stepped by
+FakeClock, so the suite is deterministic and fast. There are no
+``time.sleep``-based assertions anywhere: all timing claims are made
+against ``clock.monotonic()`` and the controller's transition log.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.dispatch import NoQuorumError, honest_tokens
+from repro.serve.engine import SnapshotInFlightError
+from repro.serve.fleet import FleetConfig
+from repro.serve.realtime import (FakeClock, RealtimeFleet, StubReplica,
+                                  Ticket)
+
+HB = 2.0
+
+
+def _cfg(n=4, r=1, **kw):
+    kw.setdefault("heartbeat_period", HB)
+    return FleetConfig(n_replicas=n, r=r, seed=0, **kw)
+
+
+def _fleet(cfg, clock, work_time=0.3, **kw):
+    kw.setdefault("jitter_instance", 0)
+    reps = [StubReplica(j, clock, work_time=work_time)
+            for j in range(cfg.n_replicas)]
+    return RealtimeFleet(reps, cfg, clock=clock, **kw)
+
+
+def _req(i, length=6):
+    return np.random.default_rng([9, i]).integers(1, 255, length)
+
+
+def _await(fleet, clock, tickets, t_max=120.0):
+    ok = clock.run_until(lambda: all(t.done for t in tickets), t_max)
+    assert ok, "tickets did not complete within t_max virtual seconds"
+
+
+# ---------------------------------------------------------------------------
+# steady state
+
+def test_delivers_exact_tokens_no_faults():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    tks = [fleet.submit(_req(i)) for i in range(6)]
+    _await(fleet, ck, tks)
+    for i, tk in enumerate(tks):
+        assert tk.error is None
+        np.testing.assert_array_equal(tk.result.tokens,
+                                      honest_tokens(_req(i)))
+        assert tk.result.quorum_honest
+    assert fleet.hedges == 0 and fleet.outages == 0
+    assert fleet.shutdown()
+
+
+def test_heartbeats_keep_idle_fleet_healthy():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    ck.advance(20 * HB)                  # long silence, no requests
+    with ck:
+        assert all(fleet.ctrl.countable(j) for j in range(4))
+        assert fleet.ctrl.transitions == []     # no false accusals
+    assert fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# failure handling
+
+def test_kill_detected_restarted_and_rejoined():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    ck.advance(3 * HB)                   # ewma warm-up beats
+    fleet.kill(1)
+    ck.run_until(lambda: fleet.n_threads_alive() >= 5 and fleet.settled(),
+                 40 * HB)
+    kinds = [(tr.replica, tr.old, tr.new) for tr in fleet.ctrl.transitions]
+    assert (1, "suspect", "dead") in kinds
+    assert (1, "recovering", "healthy") in kinds
+    assert fleet.restarts == 1
+    tk = fleet.submit(_req(0))
+    _await(fleet, ck, [tk])
+    np.testing.assert_array_equal(tk.result.tokens, honest_tokens(_req(0)))
+    assert fleet.shutdown()
+
+
+def test_pause_recovers_without_restart():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    ck.advance(2 * HB)
+    fleet.pause(2, 4 * HB)
+    tks = []                             # keep traffic flowing through
+    for i in range(14):                  # the blip so probation can clear
+        tks.append(fleet.submit(_req(i)))
+        ck.advance(1.0)
+    _await(fleet, ck, tks, t_max=300.0)
+    assert ck.run_until(lambda: fleet.settled(), 300.0)
+    kinds = [(tr.replica, tr.new) for tr in fleet.ctrl.transitions]
+    assert (2, "suspect") in kinds or (2, "dead") in kinds
+    assert fleet.restarts == 0           # the process never died
+    assert fleet.ctrl.countable(2)
+    for i, tk in enumerate(tks):
+        assert tk.error is None
+        np.testing.assert_array_equal(tk.result.tokens,
+                                      honest_tokens(_req(i)))
+    assert fleet.shutdown()
+
+
+def test_straggler_trips_deadline_hedge():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    tks = [fleet.submit(_req(i)) for i in range(3)]
+    _await(fleet, ck, tks)               # warm the latency ewma
+    fleet.slow(0, extra=50.0, duration=100.0)
+    tk = fleet.submit(_req(7))
+    _await(fleet, ck, [tk], t_max=200.0)
+    assert fleet.hedges >= 1             # the slow copy was hedged around
+    np.testing.assert_array_equal(tk.result.tokens, honest_tokens(_req(7)))
+    assert fleet.shutdown()
+
+
+def test_total_outage_raises_typed_noquorum():
+    ck = FakeClock()
+    cfg = _cfg(max_retries=1, backoff_base=0.5, backoff_cap=1.0)
+    fleet = _fleet(cfg, ck, rejoin_delay=500.0).start()
+    ck.advance(2 * HB)
+    for j in range(4):
+        fleet.kill(j)
+    ck.run_until(lambda: fleet.n_threads_alive() <= 1, 10 * HB)
+    tk = fleet.submit(_req(0))
+    ck.run_until(lambda: tk.done, 400.0)
+    assert isinstance(tk.error, NoQuorumError)
+    assert tk.error.deliverable < cfg.n_replicas - cfg.r
+    assert fleet.outages == 1
+    assert fleet.shutdown(drain=False)
+
+
+def test_low_priority_shed_while_degraded():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(shed_below=1), ck).start()
+    ck.advance(2 * HB)
+    fleet.kill(2)                        # two dead: countable < n - r
+    fleet.kill(3)
+    ck.run_until(
+        lambda: fleet.ctrl.n_countable() < 3, 20 * HB)
+    with ck:
+        assert fleet.ctrl.degraded()
+    tk = fleet.submit(_req(0), priority=0)     # sheddable while degraded
+    ck.run_until(lambda: fleet.shed == 1, 5.0)
+    with ck:
+        assert fleet.shed == 1 and not tk.done  # parked, not dropped
+    ck.run_until(lambda: tk.done, 60 * HB)      # served after rejoin
+    assert tk.error is None
+    np.testing.assert_array_equal(tk.result.tokens, honest_tokens(_req(0)))
+    assert fleet.shutdown()
+
+
+def test_byzantine_replica_outvoted():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(n=4, r=1, byz_ids=(2,), attack="sign_flip"),
+                   ck).start()
+    tks = [fleet.submit(_req(i)) for i in range(4)]
+    _await(fleet, ck, tks)
+    for i, tk in enumerate(tks):
+        np.testing.assert_array_equal(tk.result.tokens,
+                                      honest_tokens(_req(i)))
+    assert fleet.shutdown()
+
+
+def test_worker_exception_treated_as_crash_and_restarted():
+    """A replica whose process() raises must not kill the worker thread
+    silently: the copy fails (so the dispatcher hedges), the supervisor
+    restarts the replica, and the error is counted in telemetry."""
+    class PoisonOnceReplica(StubReplica):
+        def __init__(self, j, clock, **kw):
+            super().__init__(j, clock, **kw)
+            self.poisoned = j == 1
+
+        def process(self, request, should_abort):
+            if self.poisoned:
+                self.poisoned = False
+                raise ValueError("poison pill")
+            return super().process(request, should_abort)
+
+    ck = FakeClock()
+    cfg = _cfg()
+    reps = [PoisonOnceReplica(j, ck, work_time=0.3) for j in range(4)]
+    fleet = RealtimeFleet(reps, cfg, clock=ck, jitter_instance=0).start()
+    tk = fleet.submit(_req(0))
+    _await(fleet, ck, [tk])
+    assert tk.error is None
+    np.testing.assert_array_equal(tk.result.tokens, honest_tokens(_req(0)))
+    ck.run_until(lambda: fleet.restarts == 1 and fleet.settled(), 40 * HB)
+    assert fleet.worker_errors == 1
+    assert fleet.restarts == 1
+    assert fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# snapshot guard on the rejoin path (typed, engine-level contract)
+
+def test_snapshot_guard_is_typed_on_busy_stub():
+    class BusySnapshotReplica(StubReplica):
+        def __init__(self, j, clock, **kw):
+            super().__init__(j, clock, **kw)
+            self.busy = 0
+
+        def snapshot(self):
+            if self.busy:
+                raise SnapshotInFlightError(self.busy, 0)
+            return super().snapshot()
+
+    ck = FakeClock()
+    rep = BusySnapshotReplica(0, ck)
+    rep.busy = 2
+    with pytest.raises(SnapshotInFlightError) as ei:
+        rep.snapshot()
+    assert ei.value.n_active == 2
+    rep.busy = 0
+    assert rep.snapshot() == {}          # refusal mutated nothing
+
+
+# ---------------------------------------------------------------------------
+# lifecycle + determinism gates
+
+def test_drain_refuses_new_submits_and_completes_inflight():
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    tk = fleet.submit(_req(0))
+    assert fleet.shutdown(drain=True)    # drains tk before stopping
+    assert tk.done and tk.error is None
+    with pytest.raises(RuntimeError, match="draining"):
+        fleet.submit(_req(1))
+    assert fleet.n_threads_alive() == 0
+
+
+def _scripted_run():
+    """One kill + a stream of requests, fully scripted on virtual time."""
+    ck = FakeClock()
+    fleet = _fleet(_cfg(), ck).start()
+    log, tickets = [], []
+    for i in range(8):
+        ck.run_until(lambda: False, (i + 0.26) * 1.0)
+        tickets.append(fleet.submit(_req(i)))
+        if i == 3:
+            fleet.kill(0)
+    _await(fleet, ck, tickets, t_max=200.0)
+    ck.run_until(lambda: fleet.settled(), 200.0)
+    fleet.shutdown()
+    trs = [(tr.t, tr.replica, tr.old, tr.new)
+           for tr in fleet.ctrl.transitions]
+    lats = [tk.result.round_latency for tk in tickets if tk.result]
+    return trs, lats, fleet.hedges, fleet.restarts
+
+
+def test_fake_clock_runs_are_bit_deterministic():
+    """The §17 acceptance gate: two runs of the same scripted scenario
+    produce identical transition logs AND identical latencies — thread
+    scheduling never leaks into observable behaviour."""
+    a, b = _scripted_run(), _scripted_run()
+    assert a == b
+    trs, lats, hedges, restarts = a
+    assert any(new == "dead" for _, _, _, new in trs)
+    assert restarts == 1
+    assert len(lats) == 8

@@ -1,0 +1,98 @@
+"""Wall-clock chaos presets under the fake clock + one real-clock smoke.
+
+The fake-clock runs are the §17 acceptance gates: every preset must
+deliver every request (zero permanent loss), never vote below the 2f+1
+floor, recover ≥ 0.9 of pre-fault goodput after the last rejoin, and be
+bit-deterministic across runs. The real-clock smoke (``wallclock``
+marker, run in CI stage 12 under a hard timeout) re-runs one preset on
+actual timers at a compressed timescale and asserts outcomes only —
+never timings.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.fleet import FleetConfig
+from repro.serve.realtime import RealClock
+from repro.sim.realtime_chaos import PLANS, run_realtime_chaos
+
+N = 4
+
+
+def _cfg(scale=1.0, **kw):
+    kw.setdefault("heartbeat_period", 2.0 * scale)
+    return FleetConfig(n_replicas=N, r=1, seed=0, **kw)
+
+
+@pytest.fixture(scope="module", params=sorted(PLANS))
+def chaos_pair(request):
+    """Two independent fake-clock runs of one preset (shared across the
+    per-plan assertions below so each preset executes exactly twice)."""
+    mk = PLANS[request.param]
+    cfg = _cfg()
+    return (request.param,
+            run_realtime_chaos(mk(N), cfg),
+            run_realtime_chaos(mk(N), cfg))
+
+
+def test_chaos_no_permanent_loss_and_vote_floor(chaos_pair):
+    name, rep, _ = chaos_pair
+    assert rep.lost == 0, f"{name}: permanently lost requests"
+    assert rep.delivered == PLANS[name](N).n_requests
+    assert rep.violations == [], f"{name}: {rep.violations[:3]}"
+    assert rep.drained
+
+
+def test_chaos_recovers_ninety_percent_goodput(chaos_pair):
+    name, rep, _ = chaos_pair
+    assert rep.recovered >= 0.9, (
+        f"{name}: recovered={rep.recovered:.3f} "
+        f"(pre={rep.goodput_pre:.3f}, post={rep.goodput_post:.3f})")
+
+
+def test_chaos_faults_actually_bit(chaos_pair):
+    """Each preset must exercise its fault path, not just pass idle."""
+    name, rep, _ = chaos_pair
+    if name in ("kill_rejoin", "crash_cascade"):
+        assert rep.deaths >= 1 and rep.rejoins >= 1 and rep.restarts >= 1
+    if name == "crash_cascade":
+        assert rep.restarts >= 2
+    if name == "straggler":
+        assert rep.hedges >= 1       # hedging routed around the slow one
+    assert rep.recovery_time_max > 0.0 or name == "straggler"
+
+
+def test_chaos_bit_deterministic(chaos_pair):
+    """Two runs of the same preset: identical transition logs, latencies
+    and full report dicts — thread scheduling is not observable."""
+    name, a, b = chaos_pair
+    assert a.transition_log == b.transition_log, name
+    assert a.latencies == b.latencies, name
+    assert a.as_dict() == b.as_dict(), name
+
+
+@pytest.mark.wallclock
+@pytest.mark.timeout(120)
+def test_wallclock_smoke_kill_rejoin_real_timers():
+    """RealClock at 25ms heartbeats: same driver code on real threads and
+    timers. Outcome assertions only — wall-clock timings are not pinned."""
+    s = 0.025
+    plan = PLANS["kill_rejoin"](N, scale=s)
+    rep = run_realtime_chaos(plan, _cfg(scale=s), clock=RealClock(),
+                             work_time=0.3 * s)
+    assert rep.lost == 0
+    assert rep.delivered == plan.n_requests
+    assert rep.violations == []
+    assert rep.deaths >= 1 and rep.rejoins >= 1
+    assert rep.drained
+
+
+@pytest.mark.wallclock
+@pytest.mark.timeout(120)
+def test_wallclock_smoke_straggler_real_timers():
+    s = 0.025
+    rep = run_realtime_chaos(PLANS["straggler"](N, scale=s),
+                             _cfg(scale=s), clock=RealClock(),
+                             work_time=0.3 * s)
+    assert rep.lost == 0
+    assert rep.violations == []
+    assert rep.drained
